@@ -1,0 +1,54 @@
+"""Fig 10 — worker replacement overhead, cold vs warm.
+
+Two parts: (a) the calibrated model for the paper's four CNNs; (b) a REAL
+measurement on this host: cold = build params + jit train step from scratch
+(fresh process semantics: cache cleared), warm = re-jit with params resident.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.transient.replacement import ReplacementModel
+from repro.core.perf_model.speed_model import TABLE1_MODELS
+from repro.models import cnn
+
+
+def run():
+    out = []
+    m = ReplacementModel(seed=0)
+    for model, c_m in TABLE1_MODELS.items():
+        out.append({"name": f"fig10/model/{model}/cold",
+                    "value": round(m.cold_start_s(c_m), 1),
+                    "derived": f"warm={m.warm_start_s(c_m):.1f}s"})
+    # real measurement (small CNN so it fits in benchmark time)
+    spec = cnn.RESNET_15
+    imgs = jnp.zeros((8, 32, 32, 3))
+    labels = jnp.zeros((8,), jnp.int32)
+
+    t0 = time.monotonic()
+    params = cnn.init_params(jax.random.PRNGKey(0), spec)
+    step = jax.jit(lambda p: cnn.loss_fn(p, spec, imgs, labels))
+    step(params).block_until_ready()
+    cold = time.monotonic() - t0
+
+    t0 = time.monotonic()
+    step(params).block_until_ready()  # warm: compiled + resident
+    warm_exec = time.monotonic() - t0
+    t0 = time.monotonic()
+    step2 = jax.jit(lambda p: cnn.loss_fn(p, spec, imgs, labels))
+    step2(params).block_until_ready()  # warm restart: re-trace, cache hits
+    warm = time.monotonic() - t0
+
+    out.append({"name": "fig10/real/resnet15_cold_s",
+                "value": round(cold, 3),
+                "derived": f"warm_restart={warm:.3f}s exec={warm_exec*1e3:.1f}ms "
+                           f"cold>warm={int(cold > warm)}"})
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

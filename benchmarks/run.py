@@ -1,0 +1,72 @@
+"""Benchmark driver — one module per paper table/figure (+ the roofline).
+Prints ``name,value,derived`` CSV rows; tee'd to bench_output.txt by CI.
+
+PYTHONPATH=src python -m benchmarks.run [--only table2_speed_models,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "table1_speed",
+    "fig2_stability",
+    "fig3_correlation",
+    "table2_speed_models",
+    "table3_worker_speed",
+    "fig4_cluster_scaling",
+    "fig5_checkpoint",
+    "table4_ckpt_models",
+    "fig6_startup",
+    "table5_revocations",
+    "fig10_replacement",
+    "fig11_recomputation",
+    "eq4_endtoend",
+    "fig12_bottleneck",
+    "cost_savings",
+    "scheduler_gains",
+    "lm_speed_models",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,value,derived")
+    failures = 0
+    for name in MODULES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            if name == "roofline":
+                rows = [{"name": f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                         "value": round(r.get("roofline_fraction", 0.0), 4),
+                         "derived": (f"bottleneck={r.get('bottleneck')} "
+                                     f"compute={r.get('compute_s', 0):.4f}s")}
+                        for r in mod.run()
+                        if not r.get("skipped") and not r.get("failed")]
+            else:
+                rows = mod.run()
+            for r in rows:
+                derived = str(r.get("derived", "")).replace(",", ";")
+                print(f"{r['name']},{r['value']},{derived}", flush=True)
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED:", flush=True)
+            traceback.print_exc(file=sys.stdout)
+    if failures:
+        print(f"# {failures} benchmark module(s) failed")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Render EXPERIMENTS.md sections from dry-run/hillclimb artifacts.
+
+Usage: PYTHONPATH=src python scripts/render_experiments.py
+Prints: §Dry-run summary table + §Roofline single-pod table + hillclimb rows.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, ROOT)
+
+from benchmarks import roofline  # noqa: E402
+
+
+def dryrun_section() -> str:
+    rows = roofline.dryrun_status()
+    ok = [r for r in rows if r["status"] == "ok"]
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    failed = [r for r in rows if r["status"] == "FAILED"]
+    lines = [
+        f"Compiled cells: {len(ok)} ok, {len(skipped)} skipped "
+        f"(inapplicable per DESIGN.md §4), {len(failed)} failed.",
+        "",
+        "| arch | shape | mesh | status | compile s | temp GB/device |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (str(r["arch"]), str(r["shape"]),
+                                         str(r["mesh"]))):
+        lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                     f"| {r['status']} | {r['compile_s'] or '—'} "
+                     f"| {r['temp_gb']:.1f} |")
+    return "\n".join(lines)
+
+
+def roofline_section() -> str:
+    return roofline.markdown_table(roofline.run("16x16"))
+
+
+def hillclimb_section() -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ROOT, "artifacts", "hillclimb",
+                                              "*.json"))):
+        for r in json.load(open(path)):
+            if not r.get("ok"):
+                rows.append({"name": os.path.basename(path),
+                             "error": True})
+                continue
+            t = r["roofline"]
+            rows.append({
+                "name": os.path.basename(path).replace(".json", ""),
+                "arch": r["arch"], "rules": r["rules"],
+                "mw": r.get("master_weights"), "remat": r.get("remat"),
+                "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+                "collective_s": t["collective_s"],
+                "bottleneck": r["bottleneck"],
+                "frac": t["compute_s"] / max(t.values()),
+            })
+    lines = ["| variant | rules | mw | compute s | memory s | collective s |"
+             " bottleneck | roofline frac |", "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("error"):
+            lines.append(f"| {r['name']} | FAILED | | | | | | |")
+            continue
+        lines.append(f"| {r['name']} | {r['rules']} | {r['mw']} "
+                     f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+                     f"| {r['collective_s']:.3f} | "
+                     f"{r['bottleneck'].replace('_s','')} | {r['frac']:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    section = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if section in ("all", "dryrun"):
+        print("## Dry-run\n")
+        print(dryrun_section())
+    if section in ("all", "roofline"):
+        print("\n## Roofline (single-pod 16x16)\n")
+        print(roofline_section())
+    if section in ("all", "hillclimb"):
+        print("\n## Hillclimb variants\n")
+        print(hillclimb_section())

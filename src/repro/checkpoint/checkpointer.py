@@ -1,0 +1,229 @@
+"""Fault-tolerant checkpointing with writer-lease handover.
+
+Layout per checkpoint (mirrors TF's data/index/meta triple — the sizes feed
+the §IV prediction models):
+    step_<N>/
+      data-00000.bin     array payload, concatenated           (S_d)
+      index.json         leaf -> (offset, shape, dtype) map     (S_i)
+      meta.json          pytree structure + user metadata       (S_m)
+    LATEST               atomic pointer to the newest committed step
+    writer.lease         checkpoint-writer lease (chief handover, §V-E)
+
+Properties the paper's transient setting needs:
+  * atomic commit (tmp dir + rename): a revocation mid-write never corrupts
+    the latest checkpoint;
+  * the writer role is a LEASE, not an identity: any surviving worker can
+    steal an expired lease and continue checkpointing (CM-DARE's fix for the
+    chief-IP recomputation pathology, Fig 11);
+  * async mode: device->host copy happens synchronously (fast), file write
+    happens on a background thread (training continues) — used to contrast
+    with the paper's sequential checkpointing measurement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class CheckpointSizes:
+    s_d: int
+    s_i: int
+    s_m: int
+
+    @property
+    def total(self) -> int:
+        return self.s_d + self.s_i + self.s_m
+
+
+class WriterLease:
+    """File-based lease: holder writes {holder, expires}; others may steal
+    after expiry or an explicit revocation notification."""
+
+    def __init__(self, root: str, holder: str, ttl_s: float = 60.0):
+        self.path = os.path.join(root, "writer.lease")
+        self.holder = holder
+        self.ttl = ttl_s
+
+    def _read(self) -> Optional[dict]:
+        try:
+            with open(self.path) as f:
+                return json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return None
+
+    def try_acquire(self, now: Optional[float] = None) -> bool:
+        now = time.time() if now is None else now
+        cur = self._read()
+        if cur is not None and cur["holder"] != self.holder \
+                and cur["expires"] > now and not cur.get("revoked"):
+            return False
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"holder": self.holder, "expires": now + self.ttl,
+                       "revoked": False}, f)
+        os.replace(tmp, self.path)
+        return True
+
+    def renew(self, now: Optional[float] = None) -> bool:
+        cur = self._read()
+        if cur is None or cur["holder"] != self.holder:
+            return False
+        return self.try_acquire(now)
+
+    def held_by_me(self, now: Optional[float] = None) -> bool:
+        cur = self._read()
+        now = time.time() if now is None else now
+        return (cur is not None and cur["holder"] == self.holder
+                and cur["expires"] > now and not cur.get("revoked"))
+
+    def notify_revoked(self) -> None:
+        """Revocation notification (transient-TF's hook): immediately frees
+        the lease so a survivor can take over without waiting for expiry."""
+        cur = self._read() or {"holder": self.holder, "expires": 0}
+        cur["revoked"] = True
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(cur, f)
+        os.replace(tmp, self.path)
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+class Checkpointer:
+    def __init__(self, root: str, holder: str = "worker-0",
+                 async_write: bool = False, keep: int = 3):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.lease = WriterLease(root, holder)
+        self.async_write = async_write
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_sizes: Optional[CheckpointSizes] = None
+        self.last_save_seconds: Optional[float] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree, metadata: Optional[dict] = None,
+             require_lease: bool = True) -> Optional[CheckpointSizes]:
+        if require_lease and not self.lease.held_by_me():
+            if not self.lease.try_acquire():
+                return None  # someone else holds the writer role
+        t0 = time.monotonic()
+        flat = _flatten(tree)  # device->host copy is synchronous
+        if self.async_write:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat, metadata or {}))
+            self._thread.start()
+            return None
+        sizes = self._write(step, flat, metadata or {})
+        self.last_save_seconds = time.monotonic() - t0
+        return sizes
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray],
+               metadata: dict) -> CheckpointSizes:
+        tmp = os.path.join(self.root, f".tmp_step_{step}")
+        final = os.path.join(self.root, f"step_{step}")
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp, exist_ok=True)
+        index: Dict[str, Any] = {}
+        offset = 0
+        data_path = os.path.join(tmp, "data-00000.bin")
+        with open(data_path, "wb") as f:
+            for key in sorted(flat):
+                arr = flat[key]
+                buf = arr.tobytes()
+                index[key] = {"offset": offset, "nbytes": len(buf),
+                              "shape": list(arr.shape),
+                              "dtype": str(arr.dtype)}
+                f.write(buf)
+                offset += len(buf)
+        with open(os.path.join(tmp, "index.json"), "w") as f:
+            json.dump(index, f)
+        meta = {"step": step, "n_tensors": len(flat),
+                "created": time.time(), **metadata}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        shutil.rmtree(final, ignore_errors=True)
+        os.replace(tmp, final)
+        with open(os.path.join(self.root, "LATEST.tmp"), "w") as f:
+            f.write(str(step))
+        os.replace(os.path.join(self.root, "LATEST.tmp"),
+                   os.path.join(self.root, "LATEST"))
+        sizes = CheckpointSizes(
+            offset,
+            os.path.getsize(os.path.join(final, "index.json")),
+            os.path.getsize(os.path.join(final, "meta.json")))
+        self.last_sizes = sizes
+        self._gc()
+        return sizes
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.root, f"step_{s}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        try:
+            with open(os.path.join(self.root, "LATEST")) as f:
+                return int(f.read().strip())
+        except (FileNotFoundError, ValueError):
+            steps = self.all_steps()
+            return steps[-1] if steps else None
+
+    def restore(self, tree_like, step: Optional[int] = None
+                ) -> Tuple[Any, int]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.root}")
+        d = os.path.join(self.root, f"step_{step}")
+        with open(os.path.join(d, "index.json")) as f:
+            index = json.load(f)
+        with open(os.path.join(d, "data-00000.bin"), "rb") as f:
+            blob = f.read()
+        flat = {}
+        for key, rec in index.items():
+            arr = np.frombuffer(
+                blob, dtype=np.dtype(rec["dtype"]),
+                count=int(np.prod(rec["shape"])) if rec["shape"] else 1,
+                offset=rec["offset"]).reshape(rec["shape"])
+            flat[key] = arr
+        # rebuild in tree_like's structure
+        leaves_paths = jax.tree_util.tree_flatten_with_path(tree_like)
+        new_leaves = []
+        for path, leaf in leaves_paths[0]:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            arr = flat[key]
+            new_leaves.append(np.asarray(arr).astype(leaf.dtype)
+                              if hasattr(leaf, "dtype") else arr)
+        tree = jax.tree_util.tree_unflatten(leaves_paths[1], new_leaves)
+        return tree, step

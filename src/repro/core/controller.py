@@ -1,0 +1,74 @@
+"""CM-DARE controller (Fig 1, §VI-B): compares model-predicted speed against
+online measurement; deviations beyond the threshold flag a bottleneck and
+trigger mitigation (add a parameter server / replace a slow worker /
+re-provision after revocations).
+
+Defaults follow the paper: 30 s warmup, 6.7 % deviation threshold.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, List, Optional
+
+from repro.core.perf_model.cluster_model import (HeterogeneousPredictor,
+                                                 PSBottleneckModel, WorkerSpec,
+                                                 cluster_speed)
+from repro.core.profiler import PerformanceProfiler
+
+
+class Action(enum.Enum):
+    NONE = "none"
+    ADD_PARAMETER_SERVER = "add_parameter_server"
+    REPLACE_WORKER = "replace_worker"
+    REQUEST_REPLACEMENT = "request_replacement"
+
+
+@dataclasses.dataclass
+class Detection:
+    bottleneck: bool
+    measured: Optional[float]
+    predicted: float
+    deviation: float
+    action: Action
+    note: str = ""
+
+
+class Controller:
+    def __init__(self, threshold: float = 0.067, warmup_seconds: float = 30.0):
+        self.threshold = threshold
+        self.warmup_seconds = warmup_seconds
+        self.log: List[Detection] = []
+
+    def check(self, profiler: PerformanceProfiler,
+              predicted_speed: float,
+              ps_model: Optional[PSBottleneckModel] = None,
+              workers: Optional[List[WorkerSpec]] = None) -> Detection:
+        measured = profiler.speed()
+        if measured is None or predicted_speed <= 0:
+            det = Detection(False, measured, predicted_speed, 0.0, Action.NONE,
+                            "insufficient data / warming up")
+            self.log.append(det)
+            return det
+        dev = (predicted_speed - measured) / predicted_speed
+        if dev <= self.threshold:
+            det = Detection(False, measured, predicted_speed, dev, Action.NONE)
+            self.log.append(det)
+            return det
+        # bottleneck: attribute it
+        action = Action.REPLACE_WORKER
+        note = "under-performing worker(s) suspected"
+        if ps_model is not None and workers is not None:
+            if ps_model.is_bottlenecked(workers):
+                action = Action.ADD_PARAMETER_SERVER
+                note = ("aggregate worker speed exceeds PS capacity "
+                        f"({sum(w.speed for w in workers):.2f} > "
+                        f"{ps_model.capacity_steps_per_s():.2f} steps/s)")
+        det = Detection(True, measured, predicted_speed, dev, action, note)
+        self.log.append(det)
+        return det
+
+    def mitigate_ps(self, ps_model: PSBottleneckModel) -> PSBottleneckModel:
+        """§VI-B mitigation: provision one more parameter server."""
+        return PSBottleneckModel(ps_model.model_bytes, ps_model.n_ps + 1,
+                                 ps_model.ps_bw)

@@ -1,0 +1,7 @@
+from repro.core.perf_model.features import (  # noqa: F401
+    GPU_SPECS, GPUSpec, c_norm, minmax_fit, minmax_apply,
+)
+from repro.core.perf_model.regression import (  # noqa: F401
+    LinearModel, PCA, kfold_mae, mae, mape, ols_fit,
+)
+from repro.core.perf_model.svr import SVR, grid_search_svr  # noqa: F401

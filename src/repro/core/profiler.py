@@ -1,0 +1,73 @@
+"""CM-DARE performance profiler (Fig 1): tracks steps/sec with warmup
+discard, rolling averages, coefficient of variation — feeds the controller's
+bottleneck detector and retrains the online prediction models.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StepRecord:
+    t: float
+    step: int
+    loss: Optional[float] = None
+
+
+class PerformanceProfiler:
+    """Mirrors the paper's measurement protocol: average speed every
+    `window` steps, discard the first `warmup_steps` (§III-A/B)."""
+
+    def __init__(self, window: int = 100, warmup_steps: int = 100,
+                 warmup_seconds: float = 30.0):
+        self.window = window
+        self.warmup_steps = warmup_steps
+        self.warmup_seconds = warmup_seconds
+        self.records: List[StepRecord] = []
+        self.window_speeds: List[float] = []
+        self._win: Deque[StepRecord] = deque()
+
+    def record(self, step: int, t: Optional[float] = None,
+               loss: Optional[float] = None) -> None:
+        rec = StepRecord(time.monotonic() if t is None else t, step, loss)
+        self.records.append(rec)
+        self._win.append(rec)
+        if len(self._win) > self.window + 1:
+            self._win.popleft()
+        if len(self._win) >= self.window + 1:
+            span = self._win[-1].t - self._win[0].t
+            dsteps = self._win[-1].step - self._win[0].step
+            if span > 0:
+                self.window_speeds.append(dsteps / span)
+
+    def _post_warmup(self) -> List[StepRecord]:
+        if not self.records:
+            return []
+        t0 = self.records[0].t
+        return [r for r in self.records
+                if r.step >= self.warmup_steps
+                and (r.t - t0) >= self.warmup_seconds]
+
+    def speed(self) -> Optional[float]:
+        """Current steps/s over post-warmup records."""
+        rs = self._post_warmup()
+        if len(rs) < 2:
+            return None
+        span = rs[-1].t - rs[0].t
+        return (rs[-1].step - rs[0].step) / span if span > 0 else None
+
+    def cov(self) -> Optional[float]:
+        """Coefficient of variation of windowed speeds (Fig 2: <= 0.02)."""
+        if len(self.window_speeds) < 2:
+            return None
+        arr = np.asarray(self.window_speeds, float)
+        return float(arr.std() / max(arr.mean(), 1e-12))
+
+    def step_time(self) -> Optional[float]:
+        sp = self.speed()
+        return (1.0 / sp) if sp else None

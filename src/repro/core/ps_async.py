@@ -1,0 +1,131 @@
+"""Asynchronous parameter-server runtime emulation (§II).
+
+Two layers:
+
+1. `PSQueueSim` — event-driven queueing model of the PS architecture: each
+   worker alternates (compute step_time) -> (PS service 2*model_bytes/bw).
+   Reproduces Table III / Fig 4: per-worker step time flat until aggregate
+   demand saturates the PS, then uniform slowdown; adding a PS (§VI-B)
+   restores throughput.
+
+2. `async_sgd` — a functional JAX emulation of asynchronous SGD with
+   bounded staleness: each worker computes gradients at a stale snapshot of
+   the parameters; the PS applies updates in arrival order. Used to validate
+   the paper's premise that async training tolerates heterogeneous worker
+   paces (slow workers don't block fast ones).
+
+TPU adaptation note (DESIGN.md §2): the production runtime is synchronous
+SPMD (core/trainer.py); this module exists to reproduce the paper's
+measurement semantics faithfully.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.perf_model.cluster_model import PS_NET_BYTES_PER_S
+
+
+# ---------------------------------------------------------------------------
+# 1. queueing model
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PSQueueResult:
+    worker_step_time: Dict[int, float]   # effective mean step time per worker
+    cluster_speed: float                 # aggregate steps/s
+    ps_utilization: float
+
+
+def ps_queue_sim(compute_times: Sequence[float], model_bytes: float,
+                 n_ps: int = 1, ps_bw: float = PS_NET_BYTES_PER_S,
+                 steps: int = 400, seed: int = 0,
+                 n_tensors: int = 0) -> PSQueueResult:
+    """Workers with given per-step compute times sharing n_ps servers.
+
+    Per-update service follows the calibrated PS law (cluster_model):
+    max(network, per-tensor RPC) / n_ps — variables are striped across PSes.
+    """
+    from repro.core.perf_model.cluster_model import PSBottleneckModel
+    n = len(compute_times)
+    service = PSBottleneckModel(model_bytes, n_ps, ps_bw,
+                                n_tensors=n_tensors).service_time_s()
+    # Async semantics: a worker pushing to a FREE PS proceeds immediately
+    # (apply/pull overlap its next compute); pushing to a BUSY PS waits for
+    # the queue to drain (the Table III saturation regime).
+    q: List[Tuple[float, int]] = []
+    rng = np.random.default_rng(seed)
+    for w, ct in enumerate(compute_times):
+        heapq.heappush(q, (ct * rng.uniform(0.2, 1.0), w))
+    ps_free_at = 0.0
+    done_steps = np.zeros(n, int)
+    finish_t = np.zeros(n, float)
+    busy = 0.0
+    t = 0.0
+    while q:
+        t, w = heapq.heappop(q)
+        start = max(t, ps_free_at)          # queue wait if PS busy
+        ps_free_at = start + service
+        busy += service
+        done_steps[w] += 1
+        finish_t[w] = start
+        if done_steps[w] < steps:
+            heapq.heappush(q, (start + compute_times[w], w))
+    eff = {w: finish_t[w] / done_steps[w] for w in range(n)}
+    total_time = float(finish_t.max())
+    return PSQueueResult(eff, float(done_steps.sum()) / total_time,
+                         busy / total_time)
+
+
+# ---------------------------------------------------------------------------
+# 2. JAX async-SGD emulation with bounded staleness
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class AsyncTrace:
+    losses: List[float]
+    applied_updates: int
+    staleness_hist: Dict[int, int]
+
+
+def async_sgd(loss_fn: Callable, params, data_for_worker: Callable,
+              worker_step_times: Sequence[float], lr: float = 0.1,
+              total_updates: int = 200, seed: int = 0) -> Tuple[object, AsyncTrace]:
+    """Emulate async PS training: workers produce gradients computed at the
+    params snapshot they last pulled; the PS applies them on arrival.
+
+    worker_step_times sets each worker's pace; staleness emerges naturally
+    from pace differences (fast workers update many times while a slow
+    worker's gradient is in flight).
+    """
+    grad_fn = jax.jit(jax.grad(loss_fn))
+    n = len(worker_step_times)
+    rng = np.random.default_rng(seed)
+    # each worker holds (pull_version, params_snapshot, ready_time)
+    q: List[Tuple[float, int]] = []
+    snaps = []
+    for w, st in enumerate(worker_step_times):
+        snaps.append((0, params))
+        heapq.heappush(q, (st * rng.uniform(0.5, 1.5), w))
+    version = 0
+    losses = []
+    stale_hist: Dict[int, int] = {}
+    key = jax.random.PRNGKey(seed)
+    while version < total_updates:
+        t, w = heapq.heappop(q)
+        pull_v, snap = snaps[w]
+        key, sub = jax.random.split(key)
+        batch = data_for_worker(w, sub)
+        g = grad_fn(snap, *batch)
+        staleness = version - pull_v
+        stale_hist[staleness] = stale_hist.get(staleness, 0) + 1
+        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+        version += 1
+        losses.append(float(loss_fn(params, *data_for_worker(w, sub))))
+        snaps[w] = (version, params)
+        heapq.heappush(q, (t + worker_step_times[w], w))
+    return params, AsyncTrace(losses, version, stale_hist)

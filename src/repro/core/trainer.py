@@ -1,0 +1,145 @@
+"""Transient-aware elastic training loop — the TPU-native CM-DARE runtime.
+
+Integrates: sharded train_step (launch/steps.py), resumable data pipeline,
+lease-based checkpointing, performance profiler, bottleneck controller, and
+a revocation schedule (from the fleet simulator or injected by tests).
+
+Loop contract per step:
+  1. drain membership events (revocations / joins) -> roll epoch, re-split
+     batch, possibly steal the checkpoint-writer lease;
+  2. fetch the epoch's data shards (deterministic in (seed, step, shard));
+  3. jit'd train_step;
+  4. profiler.record; controller.check on a cadence;
+  5. checkpoint on the interval (writer-lease holder only).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core.controller import Controller, Detection
+from repro.core.profiler import PerformanceProfiler
+from repro.data.pipeline import ShardedLoader
+from repro.dist.elastic import ElasticMembership, Member
+from repro.launch import steps as st
+from repro.models import api
+
+
+@dataclasses.dataclass
+class MembershipEvent:
+    step: int
+    kind: str            # revoke | join
+    member_id: int
+    gpu: str = "v5e"
+
+
+@dataclasses.dataclass
+class TrainReport:
+    steps_run: int
+    final_loss: float
+    losses: List[float]
+    speed: Optional[float]
+    epochs: int
+    checkpoints: int
+    restores: int
+    detections: List[Detection]
+    wall_seconds: float
+
+
+class TransientTrainer:
+    def __init__(self, cfg: ModelConfig, run: RunConfig, loader: ShardedLoader,
+                 members: Optional[List[Member]] = None,
+                 holder: str = "worker-0",
+                 predicted_speed: Optional[float] = None):
+        self.cfg = cfg
+        self.run = run
+        self.loader = loader
+        self.members = ElasticMembership(
+            members or [Member(0)], loader.global_batch)
+        self.profiler = PerformanceProfiler(window=10, warmup_steps=5,
+                                            warmup_seconds=0.0)
+        self.controller = Controller()
+        self.ckpt = Checkpointer(run.checkpoint_dir, holder=holder)
+        self.predicted_speed = predicted_speed
+        self.train_step, self.opt = st.make_train_step(cfg, run)
+        self._jit_step = jax.jit(self.train_step, donate_argnums=(0,))
+        self.detections: List[Detection] = []
+
+    # ------------------------------------------------------------------ state
+    def init_state(self, key=None) -> st.TrainState:
+        params, _ = api.init(self.cfg, key)
+        return st.TrainState(params, self.opt.init(params),
+                             jnp.zeros((), jnp.int32))
+
+    def restore_or_init(self, key=None) -> Tuple[st.TrainState, int]:
+        shapes = jax.eval_shape(self.init_state, key)
+        try:
+            state, step = self.ckpt.restore(shapes)
+            state = jax.tree.map(jnp.asarray, state)
+            self.loader.step = step
+            return st.TrainState(state.params, state.opt,
+                                 jnp.asarray(step, jnp.int32)), step
+        except FileNotFoundError:
+            return self.init_state(key), 0
+
+    # ------------------------------------------------------------------- run
+    def run_steps(self, state: st.TrainState, n_steps: int,
+                  events: Optional[List[MembershipEvent]] = None,
+                  check_every: int = 10) -> Tuple[st.TrainState, TrainReport]:
+        events = sorted(events or [], key=lambda e: e.step)
+        ev_i = 0
+        losses: List[float] = []
+        restores = checkpoints = 0
+        t0 = time.monotonic()
+        start_step = int(state.step)
+        for local in range(n_steps):
+            step = start_step + local
+            # 1. membership events at this step boundary
+            while ev_i < len(events) and events[ev_i].step <= step:
+                ev = events[ev_i]
+                ev_i += 1
+                if ev.kind == "revoke":
+                    epoch = self.members.revoke(ev.member_id)
+                    # revoked writer: lease handover (Fig 11 fix)
+                    if not self.ckpt.lease.held_by_me():
+                        self.ckpt.lease.notify_revoked()
+                        self.ckpt.lease.try_acquire()
+                else:
+                    epoch = self.members.join(Member(ev.member_id, ev.gpu))
+                if not epoch.members:
+                    raise RuntimeError("all members revoked")
+            # 2. data (global batch stays constant across membership changes)
+            n_shards = max(1, self.members.n_alive)
+            batch_np = self.loader.next_global(n_shards)
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            # 3. step
+            state, metrics = self._jit_step(state, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            # 4. profile + detect
+            self.profiler.record(step, loss=loss)
+            if self.predicted_speed and step % check_every == 0 and step > 0:
+                det = self.controller.check(self.profiler,
+                                            self.predicted_speed)
+                self.detections.append(det)
+            # 5. checkpoint
+            if self.run.checkpoint_interval and \
+                    (step + 1) % self.run.checkpoint_interval == 0:
+                if self.ckpt.save(step + 1, state,
+                                  metadata=self.loader.state()) is not None:
+                    checkpoints += 1
+        report = TrainReport(
+            steps_run=n_steps, final_loss=losses[-1] if losses else float("nan"),
+            losses=losses, speed=self.profiler.speed(),
+            epochs=self.members.epoch_no + 1, checkpoints=checkpoints,
+            restores=restores, detections=self.detections,
+            wall_seconds=time.monotonic() - t0)
+        return state, report

@@ -1,0 +1,204 @@
+"""Discrete-event transient-fleet simulator — the stand-in for the paper's
+cloud measurement fleet (DESIGN.md §2). Drives training-loop simulations:
+revocations (per region/GPU/time-of-day), replacement startup, PS bottleneck,
+checkpoint overhead — everything Eq (4) predicts, so predicted-vs-simulated
+error is a meaningful §VI-A validation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.perf_model.cluster_model import (PSBottleneckModel, WorkerSpec,
+                                                 cluster_speed)
+from repro.core.transient.replacement import ReplacementModel
+from repro.core.transient.revocation import RevocationSampler
+from repro.core.transient.startup import StartupModel
+
+
+@dataclasses.dataclass(order=True)
+class FleetEvent:
+    t: float
+    kind: str = dataclasses.field(compare=False)
+    payload: dict = dataclasses.field(compare=False, default_factory=dict)
+
+
+@dataclasses.dataclass
+class SimWorker:
+    wid: int
+    gpu: str
+    region: str
+    speed: float           # steps/s on the target model
+    alive: bool = True
+    is_chief: bool = False
+
+
+@dataclasses.dataclass
+class SimResult:
+    total_time_s: float
+    steps_done: int
+    revocations: int
+    replacements: int
+    checkpoint_time_s: float
+    recompute_time_s: float
+    lost_steps: float
+    events: List[Tuple[float, str]]
+    monetary_cost: float
+
+
+class FleetSim:
+    """Simulate one training run on a transient cluster.
+
+    Policies: `replace` (request a new transient server on revocation),
+    `handover` (CM-DARE checkpoint-lease handover vs stock chief-IP restart).
+    """
+
+    def __init__(self, workers: List[SimWorker], *, model_gflops: float,
+                 model_bytes: float, step_speed_of: Callable[[str], float],
+                 checkpoint_interval_steps: int, checkpoint_time_s: float,
+                 n_ps: int = 1, seed: int = 0, replace: bool = True,
+                 handover: bool = True, price_of: Optional[Dict] = None):
+        self.workers = {w.wid: w for w in workers}
+        if workers:
+            workers[0].is_chief = True
+        self.model_gflops = model_gflops
+        self.model_bytes = model_bytes
+        self.speed_of = step_speed_of
+        self.i_c = checkpoint_interval_steps
+        self.t_c = checkpoint_time_s
+        self.n_ps = n_ps
+        self.replace = replace
+        self.handover = handover
+        self.rev = RevocationSampler(seed)
+        self.startup = StartupModel(seed + 1)
+        self.repl = ReplacementModel(seed + 2)
+        self.rng = np.random.default_rng(seed + 3)
+        self.price_of = price_of or {}
+
+    def _cluster_speed(self) -> float:
+        alive = [WorkerSpec(w.gpu, w.speed)
+                 for w in self.workers.values() if w.alive]
+        if not alive:
+            return 0.0
+        ps = PSBottleneckModel(self.model_bytes, self.n_ps)
+        return cluster_speed(alive, ps)
+
+    def run(self, total_steps: int, max_hours: float = 48.0) -> SimResult:
+        q: List[FleetEvent] = []
+        next_wid = max(self.workers) + 1
+        # schedule revocations
+        for w in self.workers.values():
+            lt = self.rev.lifetime(w.region, w.gpu)
+            if math.isfinite(lt):
+                heapq.heappush(q, FleetEvent(lt * 3600.0, "revoke",
+                                             {"wid": w.wid}))
+        t = 0.0
+        steps = 0.0
+        last_ckpt_step = 0
+        ckpt_time = recompute = lost = 0.0
+        revocations = replacements = 0
+        events: List[Tuple[float, str]] = []
+        gpu_seconds: Dict[str, float] = {}
+
+        def advance(to_t: float):
+            """Advance wall-clock to `to_t`, producing steps at the current
+            cluster speed with SEQUENTIAL checkpoint pauses (§IV-B) at every
+            i_c boundary — exact piecewise simulation, no Zeno refinement."""
+            nonlocal steps, t, ckpt_time, last_ckpt_step
+            sp = self._cluster_speed()
+            span = to_t - t
+            for w in self.workers.values():
+                if w.alive:
+                    gpu_seconds[w.gpu] = gpu_seconds.get(w.gpu, 0.0) + span
+            remaining = span
+            if sp > 0:
+                while remaining > 1e-12:
+                    to_boundary = self.i_c - (steps % self.i_c)
+                    if to_boundary <= 1e-9:
+                        to_boundary = self.i_c
+                    dt_needed = to_boundary / sp
+                    if dt_needed <= remaining:
+                        steps += to_boundary
+                        remaining -= dt_needed
+                        pause = min(self.t_c, remaining)
+                        ckpt_time += pause
+                        remaining -= pause
+                        last_ckpt_step = int(round(steps))
+                    else:
+                        steps += sp * remaining
+                        remaining = 0.0
+            t = to_t
+
+        def time_to_finish() -> float:
+            """Wall-clock needed to reach total_steps from (steps, t),
+            including future checkpoint pauses."""
+            sp = self._cluster_speed()
+            if sp <= 0:
+                return float("inf")
+            remaining_steps = total_steps - steps
+            n_ckpts = int(total_steps // self.i_c) - int(steps // self.i_c)
+            return remaining_steps / sp + n_ckpts * self.t_c
+
+        while steps < total_steps - 1e-6 and t < max_hours * 3600.0:
+            sp = self._cluster_speed()
+            if sp <= 0.0 and not q:
+                break
+            t_finish = t + time_to_finish()
+            if q and q[0].t < t_finish:
+                ev = heapq.heappop(q)
+                advance(max(ev.t, t))
+                if ev.kind == "revoke":
+                    w = self.workers.get(ev.payload["wid"])
+                    if w is None or not w.alive:
+                        continue
+                    w.alive = False
+                    revocations += 1
+                    events.append((t, f"revoke w{w.wid} ({w.gpu})"))
+                    if w.is_chief:
+                        if self.handover:
+                            # lease handover: another worker checkpoints
+                            for o in self.workers.values():
+                                if o.alive:
+                                    o.is_chief = True
+                                    break
+                            events.append((t, "chief handover (no recompute)"))
+                        else:
+                            # stock behavior: recompute from last checkpoint
+                            lost_now = steps - last_ckpt_step
+                            steps = float(last_ckpt_step)
+                            lost += lost_now
+                            rec = lost_now / max(self._cluster_speed(), 1e-9)
+                            recompute += rec
+                            events.append(
+                                (t, f"chief lost: recompute {lost_now:.0f} steps"))
+                    if self.replace:
+                        su = self.startup.sample(w.gpu, after_revocation=True)
+                        cold = self.repl.sample(self.model_gflops, cold=True)
+                        ready = t + su["total"] + cold
+                        heapq.heappush(q, FleetEvent(
+                            ready, "join",
+                            {"gpu": w.gpu, "region": w.region,
+                             "speed": w.speed}))
+                elif ev.kind == "join":
+                    w = SimWorker(next_wid, ev.payload["gpu"],
+                                  ev.payload["region"], ev.payload["speed"])
+                    next_wid += 1
+                    self.workers[w.wid] = w
+                    replacements += 1
+                    events.append((t, f"join w{w.wid} ({w.gpu})"))
+                    lt = self.rev.lifetime(w.region, w.gpu,
+                                           start_hour=t / 3600.0)
+                    if math.isfinite(lt):
+                        heapq.heappush(q, FleetEvent(
+                            t + lt * 3600.0, "revoke", {"wid": w.wid}))
+            else:
+                advance(t_finish)
+
+        cost = sum(secs / 3600.0 * self.price_of.get(g, 0.0)
+                   for g, secs in gpu_seconds.items())
+        return SimResult(t, int(steps), revocations, replacements, ckpt_time,
+                         recompute, lost, events, cost)

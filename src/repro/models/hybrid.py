@@ -1,0 +1,173 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE weight-shared attention+MLP block
+invoked after every `shared_attn_every` mamba layers (weight reuse — the
+Zamba2 trick that buys attention quality at ~1/6 the attention param cost).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.transformer import _stack, scan_layers
+
+
+def _split_counts(cfg: ModelConfig) -> Tuple[int, int]:
+    every = cfg.shared_attn_every
+    n_groups = cfg.n_layers // every
+    rem = cfg.n_layers - n_groups * every
+    return n_groups, rem
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    n_groups, rem = _split_counts(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    mamba = [
+        {"ln": L.init_rmsnorm(cfg.d_model),
+         "mixer": S.init_mamba2(keys[i], cfg)}
+        for i in range(cfg.n_layers)
+    ]
+    grouped = _stack(mamba[: n_groups * cfg.shared_attn_every])
+    # reshape leading (n_groups*every) -> (n_groups, every)
+    grouped = jax.tree.map(
+        lambda p: L.Param(p.value.reshape(
+            (n_groups, cfg.shared_attn_every) + p.value.shape[1:]),
+            ("groups",) + p.axes), grouped, is_leaf=L.is_param)
+    p: Dict[str, Any] = {
+        "embed": L._dense_init(keys[-1], (cfg.vocab_size, cfg.d_model),
+                               ("vocab", "embed"), scale=0.02),
+        "mamba_groups": grouped,
+        "shared_attn": {
+            "ln1": L.init_rmsnorm(cfg.d_model),
+            "attn": L.init_attention(keys[-2], cfg),
+            "ln2": L.init_rmsnorm(cfg.d_model),
+            "mlp": L.init_mlp(keys[-3], cfg.d_model, cfg.d_ff),
+        },
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "lm_head": L._dense_init(keys[-4], (cfg.d_model, cfg.vocab_size),
+                                 ("embed", "vocab")),
+    }
+    if rem:
+        p["mamba_tail"] = _stack(mamba[n_groups * cfg.shared_attn_every:])
+    return p
+
+
+def _mamba_layer(lp, cfg, x, state=None):
+    h, new_state = S.mamba2_block(lp["mixer"], cfg,
+                                  L.rmsnorm(lp["ln"], x, cfg.norm_eps),
+                                  state=state, use_kernel=cfg.use_pallas)
+    return x + h, new_state
+
+
+def _shared_attn_apply(sp, cfg, x, positions, cache=None, cache_index=None):
+    h, new_cache = L.attention(sp["attn"], cfg,
+                               L.rmsnorm(sp["ln1"], x, cfg.norm_eps),
+                               positions, cache, cache_index)
+    x = x + h
+    x = x + L.mlp(sp["mlp"], L.rmsnorm(sp["ln2"], x, cfg.norm_eps))
+    return x, new_cache
+
+
+def forward(params, cfg: ModelConfig, tokens, positions=None,
+            input_embeds=None):
+    B, Sq = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = constrain(x, "batch", "seq", "embed")
+    sp = params["shared_attn"]
+
+    def group_body(x, gp):
+        def inner(x, lp):
+            x, _ = _mamba_layer(lp, cfg, x)
+            return x, None
+        x, _ = scan_layers(inner, x, gp, cfg)
+        x, _ = _shared_attn_apply(sp, cfg, x, positions)
+        return x, None
+
+    x, _ = scan_layers(group_body, x, params["mamba_groups"], cfg)
+    if "mamba_tail" in params:
+        def inner(x, lp):
+            x, _ = _mamba_layer(lp, cfg, x)
+            return x, None
+        x, _ = scan_layers(inner, x, params["mamba_tail"], cfg)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(cfg.dtype)
+    return constrain(logits, "batch", "seq", "vocab"), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def init_state(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    n_groups, rem = _split_counts(cfg)
+    every = cfg.shared_attn_every
+    conv_shape, ssm_shape = S.mamba2_state_shape(cfg, batch)
+    mk_conv = lambda *lead: L.Param(  # noqa: E731
+        jnp.zeros(lead + conv_shape, dtype),
+        tuple(["layers"] * len(lead)) + ("batch", None, "conv_dim"))
+    mk_ssm = lambda *lead: L.Param(  # noqa: E731
+        jnp.zeros(lead + ssm_shape, dtype),
+        tuple(["layers"] * len(lead)) + ("batch", "ssm_heads", "ssm_state", None))
+    st: Dict[str, Any] = {
+        "groups": {"conv": mk_conv(n_groups, every), "ssm": mk_ssm(n_groups, every)},
+        "attn_cache": {
+            "k": L.Param(jnp.zeros((n_groups, batch, max_len, cfg.n_kv_heads,
+                                    cfg.head_dim), dtype),
+                         ("layers", "batch", "kv_seq", "kv_heads", None)),
+            "v": L.Param(jnp.zeros((n_groups, batch, max_len, cfg.n_kv_heads,
+                                    cfg.head_dim), dtype),
+                         ("layers", "batch", "kv_seq", "kv_heads", None)),
+        },
+    }
+    if rem:
+        st["tail"] = {"conv": mk_conv(rem), "ssm": mk_ssm(rem)}
+    return st
+
+
+def decode_step(params, cfg: ModelConfig, state, tokens, index):
+    B = tokens.shape[0]
+    x = params["embed"].astype(cfg.dtype)[tokens][:, None]
+    pos = jnp.full((B, 1), index, jnp.int32)
+    sp = params["shared_attn"]
+
+    def group_body(x, xs):
+        gp, gst, gcache = xs
+
+        def inner(x, xs2):
+            lp, (cs, ss) = xs2
+            x, new_st = _mamba_layer(lp, cfg, x, state=(cs, ss))
+            return x, new_st
+        x, new_states = scan_layers(inner, x, (gp, (gst["conv"], gst["ssm"])),
+                                    cfg)
+        x, new_cache = _shared_attn_apply(sp, cfg, x, pos, cache=gcache,
+                                          cache_index=index)
+        return x, (new_states, new_cache)
+
+    x, (gstates, gcaches) = scan_layers(
+        group_body, x, (params["mamba_groups"], state["groups"],
+                        state["attn_cache"]), cfg)
+    new_state: Dict[str, Any] = {
+        "groups": {"conv": gstates[0], "ssm": gstates[1]},
+        "attn_cache": gcaches,
+    }
+    if "mamba_tail" in params:
+        def inner(x, xs2):
+            lp, (cs, ss) = xs2
+            x, new_st = _mamba_layer(lp, cfg, x, state=(cs, ss))
+            return x, new_st
+        x, tail_states = scan_layers(
+            inner, x, (params["mamba_tail"],
+                       (state["tail"]["conv"], state["tail"]["ssm"])), cfg)
+        new_state["tail"] = {"conv": tail_states[0], "ssm": tail_states[1]}
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x @ params["lm_head"].astype(cfg.dtype))[:, 0]
+    return constrain(logits, "batch", "vocab"), new_state

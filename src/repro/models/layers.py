@@ -1,0 +1,457 @@
+"""Shared neural-net layers: norms, RoPE/M-RoPE, GQA + MLA attention (train,
+prefill and single-token decode paths), SwiGLU MLP, grouped-capacity MoE.
+
+Param convention: every parameter is created as ``Param(value, axes)`` where
+``axes`` is a tuple of *logical* axis names (see dist/sharding.py). The model
+api splits the tree into (values, axes) so the launcher can derive
+NamedShardings without a parallel spec tree drifting out of sync.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Param container
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Param:
+    value: jnp.ndarray
+    axes: Tuple[Optional[str], ...]
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree):
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def _dense_init(key, shape, axes, scale=None, dtype=jnp.float32) -> Param:
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    if scale is None:
+        scale = 1.0 / math.sqrt(fan_in)
+    v = jax.random.normal(key, shape, dtype) * scale
+    return Param(v, axes)
+
+
+def _zeros(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.zeros(shape, dtype), axes)
+
+
+def _ones(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.ones(shape, dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d: int) -> Dict[str, Param]:
+    return {"scale": _ones((d,), ("embed",))}
+
+
+def rmsnorm(params, x, eps: float = 1e-5, use_kernel: bool = False):
+    scale = params["scale"]
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.rmsnorm(x, scale, eps=eps)
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def head_rmsnorm(scale, x, eps: float = 1e-5):
+    """qk-norm: rmsnorm over the head_dim of (B,S,H,hd)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _quant_int8(x):
+    """Per-(…, last-dim) symmetric int8 quantization: returns (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32), axis=-1), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard / partial / M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_freqs(rot_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               rot_frac: float = 1.0,
+               mrope_sections: Tuple[int, ...] = ()) -> jnp.ndarray:
+    """x: (B,S,H,hd). positions: (B,S) or (3,B,S) for M-RoPE."""
+    hd = x.shape[-1]
+    rot_dim = int(hd * rot_frac)
+    if rot_dim == 0:
+        return x
+    rot_dim -= rot_dim % 2
+    inv = rope_freqs(rot_dim, theta)  # (rot_dim/2,)
+    if mrope_sections:
+        assert positions.ndim == 3, "M-RoPE needs (3,B,S) positions"
+        secs = mrope_sections
+        assert sum(secs) == rot_dim // 2, (secs, rot_dim)
+        parts = []
+        off = 0
+        for i, s in enumerate(secs):
+            ang = positions[i][..., None].astype(jnp.float32) * inv[off:off + s]
+            parts.append(ang)
+            off += s
+        angles = jnp.concatenate(parts, axis=-1)  # (B,S,rot_dim/2)
+    else:
+        angles = positions[..., None].astype(jnp.float32) * inv  # (B,S,rot_dim/2)
+    cos = jnp.cos(angles)[:, :, None, :]  # (B,S,1,rot_dim/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = xr[..., : rot_dim // 2], xr[..., rot_dim // 2:]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1.astype(x.dtype), out2.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA). Chunked online-softmax full attention keeps peak memory
+# O(S * chunk) instead of O(S^2) — same math as kernels/ref.py oracle.
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig) -> Dict[str, Param]:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, H, hd), ("embed", "heads", None)),
+        "wk": _dense_init(ks[1], (d, KV, hd), ("embed", "kv_heads", None)),
+        "wv": _dense_init(ks[2], (d, KV, hd), ("embed", "kv_heads", None)),
+        "wo": _dense_init(ks[3], (H, hd, d), ("heads", None, "embed"),
+                          scale=1.0 / math.sqrt(H * hd)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = _ones((hd,), (None,))
+        p["k_norm"] = _ones((hd,), (None,))
+    return p
+
+
+def _chunked_attn(q, k, v, causal: bool, q_offset, chunk: int = 1024):
+    """q:(B,Sq,H,hd) k,v:(B,Sk,KV,hd) -> (B,Sq,H,hd). GQA by head broadcast.
+
+    Scans over query chunks with a full online-softmax against k/v; O(Sq/chunk)
+    steps, peak score memory B*chunk*Sk per head group.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    vd = v.shape[-1]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+    if Sq <= chunk:
+        return _attn_block(qg, k, v, causal, q_offset, 0, scale
+                           ).reshape(B, Sq, H, vd)
+    n = Sq // chunk
+    assert Sq % chunk == 0, (Sq, chunk)
+    qc = qg.reshape(B, n, chunk, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    def body(i, qi):
+        out = _attn_block(qi, k, v, causal, q_offset, i * chunk, scale)
+        return i + 1, out
+
+    _, oc = lax.scan(body, 0, qc)
+    return oc.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, vd)
+
+
+def _attn_block(qg, k, v, causal, q_offset, block_start, scale):
+    """qg:(B,sq,KV,G,hd) against full k,v:(B,Sk,KV,hd)."""
+    B, sq, KV, G, hd = qg.shape
+    Sk = k.shape[1]
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = q_offset + block_start + jnp.arange(sq)
+        kpos = jnp.arange(Sk)
+        mask = kpos[None, :] <= qpos[:, None]  # (sq,Sk)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return out.astype(qg.dtype)
+
+
+def attention(params, cfg: ModelConfig, x, positions,
+              cache: Optional[Dict[str, jnp.ndarray]] = None,
+              cache_index=None):
+    """Full attention. If ``cache`` given: decode path (x is (B,1,d)); returns
+    (out, new_cache). Otherwise train/prefill; returns (out, None)."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = head_rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = head_rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if cfg.partial_rotary > 0:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.partial_rotary,
+                       cfg.mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.partial_rotary,
+                       cfg.mrope_sections)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+
+    if cache is not None:
+        if cfg.kv_quant:
+            # int8 KV cache: per-(token, head) scales — halves the decode
+            # memory roofline (the dominant term for every decode cell)
+            kq, ks_ = _quant_int8(k)
+            vq, vs_ = _quant_int8(v)
+            ck = lax.dynamic_update_slice(cache["k"], kq, (0, cache_index, 0, 0))
+            cv = lax.dynamic_update_slice(cache["v"], vq, (0, cache_index, 0, 0))
+            cks = lax.dynamic_update_slice(cache["k_scale"], ks_,
+                                           (0, cache_index, 0))
+            cvs = lax.dynamic_update_slice(cache["v_scale"], vs_,
+                                           (0, cache_index, 0))
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+            ck = ck.astype(jnp.bfloat16) * cks[..., None].astype(jnp.bfloat16)
+            cv = cv.astype(jnp.bfloat16) * cvs[..., None].astype(jnp.bfloat16)
+        else:
+            ck = lax.dynamic_update_slice(cache["k"],
+                                          k.astype(cache["k"].dtype),
+                                          (0, cache_index, 0, 0))
+            cv = lax.dynamic_update_slice(cache["v"],
+                                          v.astype(cache["v"].dtype),
+                                          (0, cache_index, 0, 0))
+            new_cache = {"k": ck, "v": cv}
+        ck = constrain(ck, "batch", "kv_seq", "kv_heads", None)
+        cv = constrain(cv, "batch", "kv_seq", "kv_heads", None)
+        Sk = ck.shape[1]
+        kpos = jnp.arange(Sk)
+        valid = kpos[None, None, None, None, :] <= (cache_index + S - 1)
+        KV = ck.shape[2]
+        G = cfg.n_heads // KV
+        qg = q.reshape(B, S, KV, G, cfg.head_dim)
+        logits = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                            ck.astype(jnp.float32)) / math.sqrt(cfg.head_dim)
+        logits = jnp.where(valid, logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", w, cv.astype(jnp.float32))
+        out = out.reshape(B, S, cfg.n_heads, cfg.head_dim).astype(x.dtype)
+    else:
+        new_cache = None
+        if cfg.use_pallas:
+            from repro.kernels import ops as kops
+            out = kops.flash_attention(q, k, v, causal=cfg.causal)
+        else:
+            out = _chunked_attn(q, k, v, cfg.causal, 0)
+    out = constrain(out, "batch", "seq", "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return constrain(y, "batch", "seq", "embed"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V2): latent-compressed KV. Train path materializes
+# per-head K/V; decode path uses the absorbed formulation against the compact
+# (c_kv, k_rope) cache — the technique's memory win.
+# ---------------------------------------------------------------------------
+def init_mla(key, cfg: ModelConfig) -> Dict[str, Param]:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": _dense_init(ks[0], (d, H, qk_head), ("embed", "heads", None)),
+        "wdkv": _dense_init(ks[1], (d, m.kv_lora_rank), ("embed", "qk_lora")),
+        "wkrope": _dense_init(ks[2], (d, m.qk_rope_head_dim), ("embed", None)),
+        "wuk": _dense_init(ks[3], (m.kv_lora_rank, H, m.qk_nope_head_dim),
+                           ("qk_lora", "heads", None)),
+        "wuv": _dense_init(ks[4], (m.kv_lora_rank, H, m.v_head_dim),
+                           ("qk_lora", "heads", None)),
+        "wo": _dense_init(ks[5], (H, m.v_head_dim, d), ("heads", None, "embed"),
+                          scale=1.0 / math.sqrt(H * m.v_head_dim)),
+        "kv_norm": _ones((m.kv_lora_rank,), (None,)),
+    }
+
+
+def mla_attention(params, cfg: ModelConfig, x, positions,
+                  cache: Optional[Dict[str, jnp.ndarray]] = None,
+                  cache_index=None):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    scale = 1.0 / math.sqrt(nope + rope_d)
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv = x @ params["wdkv"].astype(x.dtype)                       # (B,S,r)
+    c_kv = rmsnorm({"scale": params["kv_norm"]}, c_kv, cfg.norm_eps)
+    k_rope = (x @ params["wkrope"].astype(x.dtype))[:, :, None, :]  # (B,S,1,rd)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]  # (B,S,rd)
+
+    if cache is not None:
+        # absorbed decode: q_lat = q_nope @ W_uk  -> score against c_kv cache
+        cc = lax.dynamic_update_slice(cache["c_kv"], c_kv.astype(
+            cache["c_kv"].dtype), (0, cache_index, 0))
+        cr = lax.dynamic_update_slice(cache["k_rope"], k_rope.astype(
+            cache["k_rope"].dtype), (0, cache_index, 0))
+        cc = constrain(cc, "batch", "kv_seq", "qk_lora")
+        cr = constrain(cr, "batch", "kv_seq", None)
+        new_cache = {"c_kv": cc, "k_rope": cr}
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                           params["wuk"].astype(jnp.float32))
+        logits = (jnp.einsum("bshr,btr->bhst", q_lat, cc.astype(jnp.float32))
+                  + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                               cr.astype(jnp.float32))) * scale
+        Sk = cc.shape[1]
+        valid = jnp.arange(Sk)[None, None, None, :] <= (cache_index + S - 1)
+        logits = jnp.where(valid, logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", w, cc.astype(jnp.float32))
+        out = jnp.einsum("bshr,rhv->bshv", o_lat,
+                         params["wuv"].astype(jnp.float32)).astype(x.dtype)
+    else:
+        new_cache = None
+        k_nope = jnp.einsum("bsr,rhn->bshn", c_kv, params["wuk"].astype(x.dtype))
+        v = jnp.einsum("bsr,rhv->bshv", c_kv, params["wuv"].astype(x.dtype))
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, rope_d))],
+            axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        q_full = constrain(q_full, "batch", "seq", "heads", None)
+        k_full = constrain(k_full, "batch", "seq", "heads", None)
+        out = _chunked_attn(q_full, k_full, v, cfg.causal, 0)
+    out = constrain(out, "batch", "seq", "heads", None)
+    y = jnp.einsum("bshv,hvd->bsd", out, params["wo"].astype(x.dtype))
+    return constrain(y, "batch", "seq", "embed"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, d: int, d_ff: int, variant: str = "swiglu"
+             ) -> Dict[str, Param]:
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": _dense_init(ks[0], (d, d_ff), ("embed", "ff")),
+        "wo": _dense_init(ks[2], (d_ff, d), ("ff", "embed")),
+    }
+    if variant == "swiglu":
+        p["wg"] = _dense_init(ks[1], (d, d_ff), ("embed", "ff"))
+    return p
+
+
+def mlp(params, x):
+    if "wg" in params:  # SwiGLU
+        h = jax.nn.silu(x @ params["wg"].astype(x.dtype)) * (
+            x @ params["wi"].astype(x.dtype))
+    else:               # 2-matrix GELU (starcoder2-style)
+        h = jax.nn.gelu(x @ params["wi"].astype(x.dtype))
+    h = constrain(h, "batch", "seq", "ff")
+    return constrain(h @ params["wo"].astype(x.dtype), "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# MoE: grouped-capacity sort dispatch (static shapes, local per-group sort —
+# no global collectives in the dispatch itself; expert FFNs are TP-sharded).
+# ---------------------------------------------------------------------------
+def init_moe(key, cfg: ModelConfig) -> Dict[str, Param]:
+    mo = cfg.moe
+    d, E, f = cfg.d_model, mo.n_experts, mo.expert_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (d, E), ("embed", "experts"),
+                              scale=0.02),
+        "wi": _dense_init(ks[1], (E, d, f), ("experts", "embed", "ff")),
+        "wg": _dense_init(ks[2], (E, d, f), ("experts", "embed", "ff")),
+        "wo": _dense_init(ks[3], (E, f, d), ("experts", "ff", "embed")),
+    }
+    if mo.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, mo.n_shared_experts * f)
+    return p
+
+
+def _group_dispatch(xg, eid, w, n_experts: int, cap: int):
+    """xg:(g,d) eid,w:(g,k). Returns (buf (E*cap,d), combine metadata)."""
+    g, k = eid.shape
+    flat_e = eid.reshape(-1)
+    flat_w = w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((n_experts,), jnp.int32).at[sorted_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(g * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = pos < cap
+    dest = jnp.where(keep, sorted_e * cap + pos, n_experts * cap)  # drop row
+    tok = order // k
+    buf = jnp.zeros((n_experts * cap + 1, xg.shape[-1]), xg.dtype)
+    buf = buf.at[dest].set(xg[tok])
+    meta = (dest, tok, flat_w[order], keep)
+    return buf[:-1], meta
+
+
+def _group_combine(out_buf, meta, g: int, k: int, d: int):
+    dest, tok, w_sorted, keep = meta
+    padded = jnp.concatenate([out_buf, jnp.zeros((1, d), out_buf.dtype)])
+    pair_out = padded[jnp.where(keep, dest, out_buf.shape[0])]
+    y = jnp.zeros((g, d), out_buf.dtype)
+    y = y.at[tok].add(pair_out * w_sorted[:, None].astype(out_buf.dtype))
+    return y
+
+
+def moe(params, cfg: ModelConfig, x, router_key=None):
+    """x: (B,S,d) -> (y, aux_loss)."""
+    mo = cfg.moe
+    B, S, d = x.shape
+    E, k = mo.n_experts, mo.top_k
+    T = B * S
+    g = min(mo.group_size, T)
+    assert T % g == 0, (T, g)
+    G = T // g
+    cap = int(math.ceil(g * k / E * mo.capacity_factor))
+    cap = max(8, min(cap + (-cap) % 8, g))
+
+    xf = x.reshape(G, g, d)
+    xf = constrain(xf, "moe_groups", None, "embed")
+    logits = jnp.einsum("Ggd,de->Gge", xf, params["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_w, top_e = lax.top_k(probs, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1)) / k
+    aux = E * jnp.sum(me * ce) * mo.aux_loss_coef
+
+    bufs, metas = jax.vmap(
+        lambda xi, ei, wi: _group_dispatch(xi, ei, wi, E, cap))(xf, top_e, top_w)
+    bufs = bufs.reshape(G, E, cap, d)
+    # "experts" resolves to None (TP-inside-experts, megatron rules) or to
+    # "model" (expert parallelism, EP rules) — the all-to-all appears here.
+    bufs = constrain(bufs, "moe_groups", "experts", "expert_cap", "embed")
+    h = jax.nn.silu(jnp.einsum("Gecd,edf->Gecf", bufs,
+                               params["wg"].astype(x.dtype))) * \
+        jnp.einsum("Gecd,edf->Gecf", bufs, params["wi"].astype(x.dtype))
+    h = constrain(h, "moe_groups", "experts", "expert_cap", "ff")
+    out_buf = jnp.einsum("Gecf,efd->Gecd", h, params["wo"].astype(x.dtype))
+    out_buf = constrain(out_buf, "moe_groups", "experts", "expert_cap", "embed")
+
+    y = jax.vmap(lambda ob, m: _group_combine(ob.reshape(E * cap, d), m, g, k, d)
+                 )(out_buf, metas)
+    y = y.reshape(B, S, d)
+    if mo.n_shared_experts:
+        y = y + mlp(params["shared"], x)
+    return constrain(y, "batch", "seq", "embed"), aux

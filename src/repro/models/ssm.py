@@ -1,0 +1,208 @@
+"""Mamba2 / SSD mixer (arXiv:2405.21060) — chunked state-space-duality form.
+
+The chunked algorithm is matmul-dominated (MXU-friendly): within-chunk output
+is a masked (C B^T) X product, cross-chunk flow is a tiny associative scan over
+per-chunk states. ``ssd`` below is the pure-jnp implementation that also serves
+as the oracle for the Pallas kernel in kernels/ssd_scan.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models.layers import Param, _dense_init, _ones, _zeros, rmsnorm
+
+
+def ssd(x, dt, A, B, C, chunk: int, initial_state=None, return_state=False):
+    """SSD scan.
+
+    x: (b, s, h, p)   dt: (b, s, h)   A: (h,) (negative)
+    B, C: (b, s, g, n) with h % g == 0.
+    Returns y: (b, s, h, p) [, final_state (b, h, n, p)].
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    da = dt * A[None, None, :]                       # (b,s,h)
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    dac = da.reshape(b, nc, chunk, h)
+    Bc = jnp.repeat(B.reshape(b, nc, chunk, g, n), rep, axis=3)  # (b,nc,L,h,n)
+    Cc = jnp.repeat(C.reshape(b, nc, chunk, g, n), rep, axis=3)
+
+    cum = jnp.cumsum(dac, axis=2)                    # (b,nc,L,h)
+    # --- intra-chunk (diagonal blocks) ---
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (b,nc,L,L,h)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: masked entries have seg>0 (can overflow and would leak
+    # NaNs through the where-gradient)
+    decay = jnp.exp(jnp.where(causal[None, None, :, :, None], seg, -jnp.inf))
+    scores = jnp.einsum("bclhn,bcmhn->bclmh", Cc, Bc) * decay \
+        * dtc[:, :, None, :, :]                               # (b,nc,L,L,h)
+    y_diag = jnp.einsum("bclmh,bcmhp->bclhp", scores, xc)
+
+    # --- per-chunk states ---
+    chunk_sum = cum[:, :, -1, :]                              # (b,nc,h)
+    decay_out = jnp.exp(chunk_sum[:, :, None, :] - cum)       # (b,nc,L,h)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchnp",
+                        Bc, decay_out * dtc, xc)              # (b,nc,h,n,p)
+
+    # --- inter-chunk recurrence: S_c+1 = exp(sum_da_c) S_c + states_c ---
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, n, p), x.dtype)
+    gammas = jnp.exp(chunk_sum)                               # (b,nc,h)
+
+    def combine(e1, e2):
+        g1, s1 = e1
+        g2, s2 = e2
+        return g1 * g2, s1 * g2[..., None, None] + s2
+
+    gs, ss = lax.associative_scan(
+        combine, (gammas, states.astype(jnp.float32)), axis=1)
+    # prepend initial state: inclusive scan gives state AFTER each chunk;
+    # we need the state BEFORE each chunk (exclusive) for the off-diag term.
+    init32 = initial_state.astype(jnp.float32)
+    prev = jnp.concatenate(
+        [init32[:, None], ss[:, :-1] + (gs[:, :-1, :, None, None] * init32[:, None])],
+        axis=1)                                               # (b,nc,h,n,p)
+    final_state = (ss[:, -1] + gs[:, -1, :, None, None] * init32).astype(x.dtype)
+
+    # --- off-diagonal contribution ---
+    y_off = jnp.einsum("bclhn,bchnp,bclh->bclhp",
+                       Cc.astype(jnp.float32), prev, jnp.exp(cum))
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(b, s, h, p).astype(x.dtype)
+    if return_state:
+        return y, final_state
+    return y
+
+
+def ssd_decode_step(state, x, dt, A, B, C):
+    """Single-token recurrence. state:(b,h,n,p) x:(b,h,p) dt:(b,h) B,C:(b,g,n)."""
+    b, h, p = x.shape
+    g = B.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=1)                  # (b,h,n)
+    Ch = jnp.repeat(C, rep, axis=1)
+    da = jnp.exp(dt * A[None, :])                    # (b,h)
+    new_state = state * da[..., None, None] + \
+        (dt[..., None] * Bh)[..., :, None] * x[..., None, :]  # (b,h,n,p)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, new_state)
+    return new_state.astype(state.dtype), y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+def init_mamba2(key, cfg: ModelConfig) -> Dict[str, Param]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    nheads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 5)
+    lo, hi = s.a_init_range
+    a_init = jnp.log(jnp.linspace(lo, hi, nheads, dtype=jnp.float32))
+    return {
+        # order: [z (d_inner), x (d_inner), B (g*n), C (g*n), dt (nheads)]
+        "in_proj": _dense_init(ks[0], (d, 2 * d_inner + 2 * s.n_groups * s.d_state
+                                       + nheads), ("embed", "ssm_inner")),
+        "conv_w": _dense_init(ks[1], (s.d_conv, conv_dim), (None, "conv_dim"),
+                              scale=1.0 / math.sqrt(s.d_conv)),
+        "conv_b": _zeros((conv_dim,), ("conv_dim",)),
+        "A_log": Param(a_init, ("ssm_heads",)),
+        "D": _ones((nheads,), ("ssm_heads",)),
+        "dt_bias": _zeros((nheads,), ("ssm_heads",)),
+        "norm": _ones((d_inner,), ("ssm_inner",)),
+        "out_proj": _dense_init(ks[2], (d_inner, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, state: Optional[jnp.ndarray] = None):
+    """x:(B,S,C) depthwise causal conv, kernel w:(K,C). state:(B,K-1,C)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return out + b[None, None, :], new_state
+
+
+def mamba2_block(params, cfg: ModelConfig, x,
+                 state: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                 use_kernel: bool = False):
+    """x: (B,S,d). state: (conv_state (B,K-1,conv_dim), ssm_state (B,h,n,p)).
+
+    Returns (y, new_state or None).
+    """
+    s = cfg.ssm
+    B_, S, d = x.shape
+    d_inner = s.expand * d
+    nheads = d_inner // s.head_dim
+    gn = s.n_groups * s.d_state
+
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + d_inner + 2 * gn]
+    dt_raw = zxbcdt[..., -nheads:]
+    z = constrain(z, "batch", "seq", "ssm_inner")
+    xbc = constrain(xbc, "batch", "seq", "conv_dim")
+
+    conv_state = state[0] if state is not None else None
+    xbc, new_conv_state = _causal_conv(xbc, params["conv_w"].astype(x.dtype),
+                                       params["conv_b"].astype(x.dtype),
+                                       conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d_inner]
+    Bmat = xbc[..., d_inner:d_inner + gn].reshape(B_, S, s.n_groups, s.d_state)
+    Cmat = xbc[..., d_inner + gn:].reshape(B_, S, s.n_groups, s.d_state)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(B_, S, nheads, s.head_dim)
+    xh = constrain(xh, "batch", "seq", "ssm_heads", None)
+
+    if state is not None and S == 1:
+        ssm_state = state[1]
+        new_ssm, yh = ssd_decode_step(ssm_state, xh[:, 0], dt[:, 0], A,
+                                      Bmat[:, 0], Cmat[:, 0])
+        y = yh[:, None]
+        new_state = (new_conv_state, new_ssm)
+    elif use_kernel:
+        from repro.kernels import ops as kops
+        y = kops.ssd_scan(xh, dt.astype(x.dtype), A, Bmat, Cmat,
+                          chunk=s.chunk_size)
+        new_state = None
+    else:
+        y = ssd(xh, dt.astype(jnp.float32), A,
+                Bmat.astype(jnp.float32), Cmat.astype(jnp.float32),
+                chunk=min(s.chunk_size, S))
+        new_state = None
+
+    y = y + xh * params["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B_, S, d_inner)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm({"scale": params["norm"]}, y, cfg.norm_eps)
+    out = y @ params["out_proj"].astype(x.dtype)
+    return constrain(out, "batch", "seq", "embed"), new_state
+
+
+def mamba2_state_shape(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return ((batch, s.d_conv - 1, conv_dim),
+            (batch, nheads, s.d_state, s.head_dim))

@@ -1,0 +1,77 @@
+"""Mamba2 LM: embedding + scanned mamba2 blocks + head (attention-free)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.transformer import _stack, scan_layers
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    blocks = [
+        {"ln": L.init_rmsnorm(cfg.d_model), "mixer": S.init_mamba2(keys[i], cfg)}
+        for i in range(cfg.n_layers)
+    ]
+    return {
+        "embed": L._dense_init(keys[-1], (cfg.vocab_size, cfg.d_model),
+                               ("vocab", "embed"), scale=0.02),
+        "layers": _stack(blocks),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "lm_head": L._dense_init(keys[-2], (cfg.d_model, cfg.vocab_size),
+                                 ("embed", "vocab")),
+    }
+
+
+def forward(params, cfg: ModelConfig, tokens, positions=None,
+            input_embeds=None):
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = constrain(x, "batch", "seq", "embed")
+
+    def body(x, lp):
+        h, _ = S.mamba2_block(lp["mixer"], cfg,
+                              L.rmsnorm(lp["ln"], x, cfg.norm_eps),
+                              use_kernel=cfg.use_pallas)
+        return x + h, None
+
+    x, _ = scan_layers(body, x, params["layers"], cfg)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(cfg.dtype)
+    return constrain(logits, "batch", "seq", "vocab"), jnp.zeros((), jnp.float32)
+
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    conv_shape, ssm_shape = S.mamba2_state_shape(cfg, batch)
+    n = cfg.n_layers
+    return {
+        "conv": L.Param(jnp.zeros((n,) + conv_shape, dtype),
+                        ("layers", "batch", None, "conv_dim")),
+        "ssm": L.Param(jnp.zeros((n,) + ssm_shape, dtype),
+                       ("layers", "batch", "ssm_heads", "ssm_state", None)),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, state, tokens, index):
+    x = params["embed"].astype(cfg.dtype)[tokens][:, None]
+
+    def body(x, xs):
+        lp, (cs, ss) = xs
+        h, new_st = S.mamba2_block(lp["mixer"], cfg,
+                                   L.rmsnorm(lp["ln"], x, cfg.norm_eps),
+                                   state=(cs, ss))
+        return x + h, new_st
+
+    x, new_states = scan_layers(body, x, (params["layers"],
+                                          (state["conv"], state["ssm"])), cfg)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x @ params["lm_head"].astype(cfg.dtype))[:, 0]
+    return constrain(logits, "batch", "vocab"), \
+        {"conv": new_states[0], "ssm": new_states[1]}

@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adam, adamw, make_optimizer, momentum, sgd, global_norm,
+    clip_by_global_norm,
+)
+from repro.optim.schedules import constant, cosine_warmup, linear_warmup  # noqa: F401

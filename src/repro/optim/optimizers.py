@@ -1,0 +1,136 @@
+"""Minimal optimizer library (no optax in container): SGD / momentum / Adam /
+AdamW with gradient clipping; optimizer state mirrors the param pytree so it
+shards with the same rules (and can be ZeRO-1 sharded over the data axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # update(grads, opt_state, params, step) -> (new_params, new_opt_state)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def _sched(lr) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    return lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+
+def sgd(lr) -> Optimizer:
+    lr_fn = _sched(lr)
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        new = jax.tree.map(lambda p, g: p - lr_t * g.astype(p.dtype),
+                           params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9) -> Optimizer:
+    lr_fn = _sched(lr)
+
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        m = jax.tree.map(lambda m_, g: beta * m_ + g.astype(m_.dtype),
+                         state["m"], grads)
+        new = jax.tree.map(lambda p, m_: p - lr_t * m_, params, m)
+        return new, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0, master: bool = False) -> Optimizer:
+    """Adam/AdamW. With master=True the live params are bf16 (so gradients —
+    and their data-axis all-reduce — are bf16, HALVING collective bytes) and
+    an fp32 master copy lives in the optimizer state (ZeRO-1-shardable)."""
+    lr_fn = _sched(lr)
+
+    def init(params):
+        st = {
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+        if master:
+            st["w32"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        return st
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v, w32):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            mhat = m / c1
+            vhat = v / c2
+            step_ = mhat / (jnp.sqrt(vhat) + eps)
+            src = w32 if w32 is not None else p.astype(jnp.float32)
+            if weight_decay:
+                step_ = step_ + weight_decay * src
+            new32 = src - lr_t * step_
+            return new32.astype(p.dtype), m, v, new32
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_w = (treedef.flatten_up_to(state["w32"]) if master
+                  else [None] * len(flat_p))
+        out = [upd(p, g, m, v, w) for p, g, m, v, w in
+               zip(flat_p, flat_g, flat_m, flat_v, flat_w)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_state = {"m": treedef.unflatten([o[1] for o in out]),
+                     "v": treedef.unflatten([o[2] for o in out])}
+        if master:
+            new_state["w32"] = treedef.unflatten([o[3] for o in out])
+        return new_p, new_state
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, master: bool = False) -> Optimizer:
+    return adam(lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
+                master=master)
+
+
+def make_optimizer(name: str, lr, weight_decay: float = 0.0,
+                   master: bool = False) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return momentum(lr)
+    if name == "adam":
+        return adam(lr, master=master)
+    if name == "adamw":
+        return adamw(lr, weight_decay=weight_decay, master=master)
+    raise KeyError(name)

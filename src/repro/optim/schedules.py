@@ -1,0 +1,27 @@
+"""Learning-rate schedules (callables step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def fn(step):
+        frac = jnp.minimum(1.0, (step + 1.0) / max(1, warmup_steps))
+        return jnp.asarray(lr, jnp.float32) * frac
+    return fn
+
+
+def cosine_warmup(lr: float, warmup_steps: int, total_steps: int,
+                  min_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = jnp.minimum(1.0, (step + 1.0) / max(1, warmup_steps))
+        prog = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps),
+                        0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.asarray(lr, jnp.float32) * warm * cos
+    return fn

@@ -1,0 +1,7 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+# NOTE: no XLA_FLAGS here — tests and benches must see the single real
+# device; only launch/dryrun.py forces 512 placeholder host devices.

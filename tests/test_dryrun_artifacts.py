@@ -1,0 +1,67 @@
+"""Validate the multi-pod dry-run deliverable from its artifacts: every
+applicable (arch x shape) cell compiled on BOTH production meshes with sane
+cost/collective numbers. (Artifacts are produced by
+scripts/run_dryrun_sweep.py; this test documents+guards the deliverable.)"""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs import ALL_SHAPES, ARCH_IDS, get_config, valid_cells
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts", "dryrun")
+
+pytestmark = pytest.mark.skipif(
+    not glob.glob(os.path.join(ART, "*.json")),
+    reason="dry-run artifacts not generated (run scripts/run_dryrun_sweep.py)")
+
+
+def _load(arch, shape):
+    path = os.path.join(ART, f"{arch}__{shape}.json")
+    if not os.path.exists(path):
+        return None
+    return json.load(open(path))
+
+
+def test_all_40_cells_have_artifacts():
+    missing = []
+    for arch in ARCH_IDS:
+        for s in ALL_SHAPES:
+            if _load(arch, s.name) is None:
+                missing.append((arch, s.name))
+    assert not missing, missing
+
+
+def test_applicable_cells_compiled_on_both_meshes():
+    bad = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        valid = {s.name for s in valid_cells(cfg)}
+        for s in ALL_SHAPES:
+            recs = _load(arch, s.name)
+            if s.name not in valid:
+                assert any(r.get("skipped") for r in recs), (arch, s.name)
+                continue
+            meshes = {r.get("mesh") for r in recs if r.get("ok")}
+            if not {"16x16", "2x16x16"} <= meshes:
+                bad.append((arch, s.name, meshes))
+    assert not bad, bad
+
+
+def test_singlepod_costs_are_sane():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for s in valid_cells(cfg):
+            recs = [r for r in _load(arch, s.name)
+                    if r.get("ok") and r.get("mesh") == "16x16"]
+            for r in recs:
+                assert r["flops_per_device_corrected"] > 0, (arch, s.name)
+                assert r["bytes_per_device_corrected"] > 0
+                terms = r["roofline"]
+                assert all(v >= 0 for v in terms.values())
+                # useful-flops ratio must be physical (0 < ratio <= ~1.1)
+                if s.kind == "train":
+                    assert 0.01 < r["useful_flops_ratio"] < 1.2, \
+                        (arch, s.name, r["useful_flops_ratio"])

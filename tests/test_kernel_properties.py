@@ -1,0 +1,96 @@
+"""Property-based kernel validation (hypothesis): random shape/dtype sweeps
+against the jnp oracles, plus structural invariants (causality, scale/shift
+equivariances) that hold for ANY correct implementation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+_dims = st.sampled_from([32, 64, 128])
+_heads = st.sampled_from([(2, 1), (2, 2), (4, 2)])  # (H, KV)
+
+
+@given(sq=_dims, hk=_heads, hd=st.sampled_from([32, 64]),
+       seed=st.integers(0, 10))
+@settings(max_examples=10, deadline=None)
+def test_flash_attention_matches_ref_random(sq, hk, hd, seed):
+    H, KV = hk
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, sq, H, hd))
+    k = jax.random.normal(ks[1], (1, sq, KV, hd))
+    v = jax.random.normal(ks[2], (1, sq, KV, hd))
+    out = ops.flash_attention(q, k, v, True, 32, 32)
+    want = ref.flash_attention_ref(q, k, v, True)
+    np.testing.assert_allclose(out, want, atol=3e-5, rtol=3e-5)
+
+
+@given(seed=st.integers(0, 20))
+@settings(max_examples=8, deadline=None)
+def test_flash_attention_causality(seed):
+    """Future tokens must not influence past outputs."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    S, H, hd = 64, 2, 32
+    q = jax.random.normal(ks[0], (1, S, H, hd))
+    k = jax.random.normal(ks[1], (1, S, H, hd))
+    v = jax.random.normal(ks[2], (1, S, H, hd))
+    out1 = ops.flash_attention(q, k, v, True, 32, 32)
+    # perturb the LAST key/value only
+    k2 = k.at[:, -1].add(jax.random.normal(ks[3], (1, H, hd)))
+    out2 = ops.flash_attention(q, k2, v, True, 32, 32)
+    np.testing.assert_allclose(out1[:, :-1], out2[:, :-1], atol=1e-6)
+
+
+@given(scale=st.floats(0.25, 4.0), seed=st.integers(0, 10))
+@settings(max_examples=8, deadline=None)
+def test_rmsnorm_scale_invariance(scale, seed):
+    """rmsnorm(c*x) == rmsnorm(x) for any positive scalar c."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 64))
+    g = jnp.ones((64,))
+    a = ops.rmsnorm(x, g)
+    b = ops.rmsnorm(x * scale, g)
+    np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+
+@given(s=st.sampled_from([64, 128]), chunk=st.sampled_from([16, 32, 64]),
+       seed=st.integers(0, 10))
+@settings(max_examples=10, deadline=None)
+def test_ssd_chunk_size_invariance(s, chunk, seed):
+    """The chunked SSD result must not depend on the chunk size."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    b, h, p, n = 1, 2, 16, 8
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, 1, n))
+    C = jax.random.normal(ks[4], (b, s, 1, n))
+    y1 = ops.ssd_scan(x, dt, A, B, C, chunk)
+    y2 = ref.ssd_scan_ref(x, dt, A, B, C, chunk=s)  # single chunk
+    scale = float(jnp.max(jnp.abs(y2))) + 1e-6
+    np.testing.assert_allclose(np.asarray(y1) / scale,
+                               np.asarray(y2) / scale, atol=2e-4)
+
+
+@given(seed=st.integers(0, 10))
+@settings(max_examples=6, deadline=None)
+def test_ssd_state_continuity(seed):
+    """Splitting a sequence in two and carrying the state == one pass."""
+    from repro.models.ssm import ssd
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    b, s, h, p, n = 1, 64, 2, 8, 4
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, 1, n))
+    C = jax.random.normal(ks[4], (b, s, 1, n))
+    y_full = ssd(x, dt, A, B, C, chunk=16)
+    half = s // 2
+    y1, st1 = ssd(x[:, :half], dt[:, :half], A, B[:, :half], C[:, :half],
+                  chunk=16, return_state=True)
+    y2 = ssd(x[:, half:], dt[:, half:], A, B[:, half:], C[:, half:],
+             chunk=16, initial_state=st1)
+    y_split = jnp.concatenate([y1, y2], axis=1)
+    np.testing.assert_allclose(y_full, y_split, atol=1e-4, rtol=1e-3)

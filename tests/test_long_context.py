@@ -1,0 +1,53 @@
+"""The long_500k cell rationale, as executable facts: SSM decode state is
+O(1) in context length, attention KV cache is O(L) — why mamba2/zamba2 run
+the 500k cell and pure-attention archs skip it (DESIGN.md §4)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import LONG_500K, get_config, valid_cells
+from repro.models import api
+
+
+def _state_bytes(cfg, max_len):
+    vals, _ = api.decode_state_specs(cfg, batch=1, max_len=max_len)
+    return sum(int(jnp.dtype(v.dtype).itemsize) *
+               int(jnp.prod(jnp.array(v.shape)))
+               for v in jax.tree.leaves(vals))
+
+
+def test_ssm_state_constant_in_context_length():
+    cfg = get_config("mamba2-1.3b")
+    assert _state_bytes(cfg, 1024) == _state_bytes(cfg, 524288)
+
+
+def test_attention_cache_linear_in_context_length():
+    cfg = get_config("qwen3-1.7b")
+    b1, b2 = _state_bytes(cfg, 1024), _state_bytes(cfg, 4096)
+    assert b2 == pytest.approx(4 * b1, rel=0.01)
+
+
+def test_hybrid_cache_sublinear():
+    """zamba2: one shared attention block per 6 mamba layers -> cache grows
+    with L but ~7x smaller than a full-attention peer of the same size."""
+    zb = get_config("zamba2-1.2b")
+    qw = get_config("qwen3-1.7b")
+    L = 32768
+    per_layer_zb = _state_bytes(zb, L) / zb.n_layers
+    per_layer_qw = _state_bytes(qw, L) / qw.n_layers
+    assert per_layer_zb < per_layer_qw
+
+    # growth from 32k -> 500k is far below linear (only the shared blocks)
+    g = _state_bytes(zb, 524288) / _state_bytes(zb, 32768)
+    assert g < 16.5  # linear would be 16x on the attention part alone
+
+
+def test_long_500k_cell_membership():
+    runs = {a for a in ("mamba2-1.3b", "zamba2-1.2b")}
+    for arch in ("qwen3-1.7b", "yi-6b", "starcoder2-15b", "stablelm-1.6b",
+                 "qwen2-vl-2b", "granite-moe-3b-a800m",
+                 "deepseek-v2-lite-16b", "hubert-xlarge",
+                 "mamba2-1.3b", "zamba2-1.2b"):
+        cfg = get_config(arch)
+        names = {s.name for s in valid_cells(cfg)}
+        assert (LONG_500K.name in names) == (arch in runs), arch

@@ -1,0 +1,102 @@
+"""Beyond-paper optimization knobs: master-weights (bf16 grads / fp32
+master), ZeRO-1 sharding derivation, DP/EP rule-sets, schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import RunConfig, TRAIN_4K, get_config
+from repro.dist import sharding as sh
+from repro.launch import steps as st
+from repro.models import api
+from repro.optim import adamw, cosine_warmup, make_optimizer
+
+
+def test_master_weights_training_converges():
+    cfg = get_config("qwen3-1.7b", smoke=True)
+    batch = api.make_batch(cfg, TRAIN_4K, batch_override=2, seq_override=32)
+    losses = {}
+    for mw in (False, True):
+        run = RunConfig(lr=2e-3, warmup_steps=1, total_steps=10,
+                        zero1=False, master_weights=mw)
+        step, opt = st.make_train_step(cfg, run)
+        state = st.init_train_state(cfg, run, jax.random.PRNGKey(0))
+        if mw:
+            assert all(p.dtype == jnp.bfloat16
+                       for p in jax.tree.leaves(state.params))
+            assert "w32" in state.opt
+        jit = jax.jit(step)
+        ls = []
+        for _ in range(6):
+            state, m = jit(state, batch)
+            ls.append(float(m["loss"]))
+        losses[mw] = ls
+    # both converge, and to similar loss (master copy preserves accuracy)
+    assert losses[False][-1] < losses[False][0]
+    assert losses[True][-1] < losses[True][0]
+    assert abs(losses[True][-1] - losses[False][-1]) < 0.15
+
+
+def test_master_weights_bits_match_fp32_updates():
+    """fp32 master evolves identically to plain fp32 adam (same grads)."""
+    p32 = {"w": jnp.ones((8,), jnp.float32) * 0.5}
+    pbf = jax.tree.map(lambda x: x.astype(jnp.bfloat16), p32)
+    opt32 = adamw(0.1, master=False)
+    optm = adamw(0.1, master=True)
+    s32, sm = opt32.init(p32), optm.init(pbf)
+    g = {"w": jnp.full((8,), 0.3, jnp.float32)}
+    gb = jax.tree.map(lambda x: x.astype(jnp.bfloat16), g)
+    step = jnp.zeros((), jnp.int32)
+    p32n, s32n = opt32.update(g, s32, p32, step)
+    pbfn, smn = optm.update(gb, sm, pbf, step)
+    np.testing.assert_allclose(np.asarray(smn["w32"]["w"]),
+                               np.asarray(p32n["w"]), rtol=1e-2)
+    assert pbfn["w"].dtype == jnp.bfloat16
+
+
+@pytest.mark.parametrize("rules_name,rules", [
+    ("dp", sh.DP_RULES), ("ep", sh.EP_RULES), ("dpep", sh.DPEP_RULES),
+    ("fsdp", sh.FSDP_RULES)])
+def test_rule_variants_resolve(rules_name, rules):
+    m = jax.make_mesh((1, 1), ("data", "model"))
+    spec = sh.logical_spec(("batch", "seq", "embed"), rules, m)
+    assert spec is not None
+    if rules_name == "dp":
+        assert spec[0] == ("data", "model")
+
+
+def test_moe_forward_same_under_rules():
+    """MoE math is layout-independent: same outputs under any rule-set
+    (single-device mesh makes all constraints no-ops, but the constrain
+    calls must at least resolve for every rule-set)."""
+    cfg = get_config("granite-moe-3b-a800m", smoke=True).with_(dtype="float32")
+    params, _ = api.init(cfg, jax.random.PRNGKey(0))
+    batch = api.make_batch(cfg, TRAIN_4K, batch_override=2, seq_override=32)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    outs = []
+    for rules in (sh.MEGATRON_RULES, sh.DP_RULES, sh.EP_RULES, sh.DPEP_RULES):
+        with sh.use_sharding(mesh, rules):
+            outs.append(api.prefill(params, cfg, batch))
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=1e-5)
+
+
+def test_cosine_warmup_shape():
+    fn = cosine_warmup(1.0, 10, 100)
+    assert float(fn(jnp.asarray(0))) < 0.2
+    assert float(fn(jnp.asarray(10))) == pytest.approx(1.0, abs=0.05)
+    assert float(fn(jnp.asarray(100))) == pytest.approx(0.1, abs=0.02)
+
+
+def test_zero1_shards_opt_state():
+    cfg = get_config("qwen3-1.7b", smoke=True)
+    run = RunConfig(zero1=True)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ps = st.param_shardings(mesh, cfg)
+    os_ = st.opt_shardings(mesh, cfg, run, ps)
+    assert set(os_.keys()) == {"m", "v"}
+    # every m-leaf sharding has "data" somewhere (zero1) when divisible
+    n_data = sum(1 for s in jax.tree.leaves(os_["m"])
+                 if "data" in str(s.spec))
+    assert n_data > 0

@@ -1,0 +1,145 @@
+"""Unit + property tests for the paper's modeling stack (§III, §IV, §VI)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.perf_model.checkpoint_model import CkptRow, table4_models
+from repro.core.perf_model.cluster_model import (Eq4Inputs, PSBottleneckModel,
+                                                 WorkerSpec, cluster_speed,
+                                                 expected_revocations,
+                                                 predict_total_time)
+from repro.core.perf_model.features import c_norm, minmax_apply, minmax_fit
+from repro.core.perf_model.regression import (LinearModel, PCA, kfold_mae,
+                                              mae, mape, train_test_split)
+from repro.core.perf_model.speed_model import (TABLE1_MODELS, TABLE1_SPEED,
+                                               calibrate_generators,
+                                               synth_dataset, table2_models)
+from repro.core.perf_model.svr import SVR, grid_search_svr
+
+
+# ------------------------------------------------------------------ features
+@given(st.lists(st.floats(0.1, 1e3), min_size=2, max_size=30))
+def test_minmax_bounds(xs):
+    lo, hi = minmax_fit(np.array(xs))
+    z = minmax_apply(np.array(xs), lo, hi)
+    assert np.all(z >= -1e-12) and np.all(z <= 1 + 1e-12)
+
+
+# ---------------------------------------------------------------- regression
+@given(st.floats(-5, 5), st.floats(-5, 5),
+       st.lists(st.floats(-10, 10), min_size=5, max_size=40))
+@settings(max_examples=25, deadline=None)
+def test_ols_exact_on_linear_data(a, b, xs):
+    X = np.array(xs)[:, None]
+    if np.ptp(X) < 1e-6:
+        return
+    y = a * X[:, 0] + b
+    m = LinearModel().fit(X, y)
+    assert mae(y, m.predict(X)) < 1e-6
+
+
+def test_pca_recovers_dominant_direction():
+    rng = np.random.default_rng(0)
+    z = rng.normal(size=(200, 1))
+    X = np.concatenate([3 * z, z, 0.01 * rng.normal(size=(200, 1))], axis=1)
+    p = PCA(1).fit(X)
+    d = p.comps_[0] / np.linalg.norm(p.comps_[0])
+    want = np.array([3.0, 1.0, 0.0]) / np.sqrt(10)
+    assert abs(abs(d @ want) - 1.0) < 1e-2
+
+
+def test_kfold_is_deterministic():
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(30, 1))
+    y = X[:, 0] * 2 + rng.normal(size=30) * 0.1
+    fit = lambda Xt, yt: LinearModel().fit(Xt, yt)  # noqa: E731
+    assert kfold_mae(fit, X, y) == kfold_mae(fit, X, y)
+
+
+# ----------------------------------------------------------------------- SVR
+def test_svr_rbf_beats_linear_on_nonlinear_data():
+    x = np.linspace(0, 1, 30)[:, None]
+    y = np.sin(6 * x[:, 0]) + 0.5 * x[:, 0]
+    svr = SVR(kernel="rbf", C=50, epsilon=0.01).fit(x, y)
+    lin = LinearModel().fit(x, y)
+    assert mae(y, svr.predict(x)) < 0.3 * mae(y, lin.predict(x))
+
+
+def test_svr_respects_box_constraint_and_eps_tube():
+    x = np.linspace(0, 1, 20)[:, None]
+    y = 2 * x[:, 0]
+    m = SVR(kernel="rbf", C=10.0, epsilon=0.05).fit(x, y)
+    assert np.all(np.abs(m.beta_) <= 10.0 + 1e-6)
+    # interior points must lie inside the epsilon tube
+    resid = np.abs(y - m.predict(x))
+    interior = np.abs(m.beta_) < 10.0 - 1e-6
+    assert np.all(resid[interior] <= 0.05 + 1e-3)
+
+
+# ----------------------------------------------------------- speed model §III
+def test_generator_reproduces_table1_exactly():
+    gens = calibrate_generators()
+    for gpu, speeds in TABLE1_SPEED.items():
+        for model, sp in speeds.items():
+            got = 1.0 / gens[gpu].step_time(TABLE1_MODELS[model])
+            assert abs(got - sp) / sp < 1e-9
+
+
+def test_table2_svr_rbf_wins_for_k80():
+    rows = synth_dataset({**TABLE1_MODELS,
+                          **{f"m{i}": 0.5 + 2.0 * i for i in range(16)}},
+                         samples_per=3, seed=0)
+    reports = {r.name: r for r in table2_models(rows)}
+    assert reports["svr_rbf_k80"].kfold_mae <= \
+        reports["univariate_k80"].kfold_mae + 1e-9
+
+
+# ------------------------------------------------------------- cluster model
+def test_ps_capacity_anchor_resnet32():
+    # 97 tensors, 1.87 MB: capacity ~41 updates/s (Table III saturation)
+    ps = PSBottleneckModel(1.87e6, 1, n_tensors=97)
+    assert 38 < ps.capacity_steps_per_s() < 45
+
+
+def test_cluster_speed_is_sum_until_cap():
+    ps = PSBottleneckModel(1.87e6, 1, n_tensors=97)
+    w = [WorkerSpec("p100", 12.19)] * 2
+    assert cluster_speed(w, ps) == pytest.approx(24.38)
+    w8 = [WorkerSpec("p100", 12.19)] * 8
+    assert cluster_speed(w8, ps) == pytest.approx(
+        ps.capacity_steps_per_s())
+
+
+@given(st.lists(st.floats(0.1, 30), min_size=1, max_size=10))
+def test_composition_monotone(speeds):
+    workers = [WorkerSpec("x", s) for s in speeds]
+    assert cluster_speed(workers) == pytest.approx(sum(speeds))
+
+
+@given(st.integers(1000, 100000), st.integers(100, 5000),
+       st.floats(0.5, 20.0), st.floats(0, 1), st.floats(0, 1))
+@settings(max_examples=30, deadline=None)
+def test_eq4_monotonicity(n_w, i_c, t_c, p1, p2):
+    inp_lo = Eq4Inputs(n_w, i_c, t_c, 60.0, 30.0, [min(p1, p2)])
+    inp_hi = Eq4Inputs(n_w, i_c, t_c, 60.0, 30.0, [max(p1, p2)])
+    assert predict_total_time(5.0, inp_lo) <= predict_total_time(5.0, inp_hi)
+    # faster cluster -> shorter time
+    assert predict_total_time(10.0, inp_lo) < predict_total_time(5.0, inp_lo)
+
+
+def test_eq5():
+    assert expected_revocations([0.2, 0.3, 0.5]) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------- checkpoint model
+def test_table4_models_fit_linear_world():
+    rng = np.random.default_rng(0)
+    rows = []
+    for i in range(20):
+        s_d = float(rng.uniform(1e6, 100e6))
+        s_m, s_i = s_d * 0.01, s_d * 0.002
+        t = 0.3 + (s_d + s_m + s_i) / 120e6 + rng.normal(0, 0.01)
+        rows.append(CkptRow(f"m{i}", s_d, s_m, s_i, t))
+    reports = {r.name: r for r in table4_models(rows)}
+    assert reports["univariate"].test_mape < 5.0
+    assert reports["multivariate_pca2"].test_mape < 10.0

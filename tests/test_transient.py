@@ -1,0 +1,107 @@
+"""Transient-fleet layer tests: revocation models, startup, replacement,
+fleet simulation invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.transient.fleet import FleetSim, SimWorker
+from repro.core.transient.replacement import (ReplacementModel,
+                                              recomputation_overhead_s)
+from repro.core.transient.revocation import (REGION_GPU_PARAMS, TABLE5_RATES,
+                                             RevocationSampler)
+from repro.core.transient.startup import StartupModel
+
+
+# ----------------------------------------------------------------- lifetimes
+@pytest.mark.parametrize("key", sorted(
+    k for k, v in TABLE5_RATES.items() if v is not None))
+def test_cdf_monotone_and_bounded(key):
+    m = REGION_GPU_PARAMS[key]
+    ts = np.linspace(0, 24, 200)
+    c = m.cdf(ts)
+    assert np.all(np.diff(c) >= -1e-12)
+    assert c[-1] == pytest.approx(m.p24, abs=1e-9)
+    assert m.prob_revoked_within(24.0) == pytest.approx(m.p24, abs=1e-9)
+
+
+def test_empirical_rate_matches_table5():
+    samp = RevocationSampler(seed=0)
+    for key, rate in list(TABLE5_RATES.items()):
+        if rate is None:
+            continue
+        region, gpu = key
+        n = 400
+        revoked = sum(1 for _ in range(n)
+                      if math.isfinite(samp.lifetime(region, gpu)))
+        assert abs(revoked / n - rate) < 0.08, (key, revoked / n, rate)
+
+
+def test_uswest_k80_long_lived_vs_europe():
+    """Fig 8: >50% of europe-west1 K80s die in 2h; <5% in us-west1."""
+    eu = REGION_GPU_PARAMS[("europe-west1", "k80")]
+    us = REGION_GPU_PARAMS[("us-west1", "k80")]
+    assert eu.cdf(np.array([2.0]))[0] > 0.4
+    assert us.cdf(np.array([2.0]))[0] < 0.05
+
+
+# ------------------------------------------------------------------- startup
+def test_startup_under_100s_and_ordering():
+    m = StartupModel(0)
+    for gpu in ("k80", "p100", "v100"):
+        tr = m.mean_total(gpu, transient=True)
+        od = m.mean_total(gpu, transient=False)
+        assert tr < 100.0
+        assert tr > od  # transient slower than on-demand
+    assert m.mean_total("p100") > m.mean_total("k80")  # paper: ~8.7% slower
+
+
+# ---------------------------------------------------------------- replacement
+def test_cold_warm_ordering_and_complexity_growth():
+    m = ReplacementModel(0)
+    assert m.cold_start_s(0.59) > m.warm_start_s(0.59)
+    assert m.cold_start_s(21.3) > m.cold_start_s(0.59)
+
+
+@given(st.integers(0, 4000), st.floats(0.5, 50))
+def test_recompute_bounded_by_interval(steps_since, speed):
+    t = recomputation_overhead_s(steps_since, speed, True)
+    assert t <= 4000 / speed + 1e-9
+    assert recomputation_overhead_s(steps_since, speed, False) == 0.0
+
+
+# -------------------------------------------------------------------- fleet
+def _mk_sim(seed=0, handover=True, replace=True):
+    workers = [SimWorker(i, "k80", "us-west1", 4.56) for i in range(4)]
+    return FleetSim(workers, model_gflops=1.54, model_bytes=1.87e6,
+                    step_speed_of=lambda g: 4.56,
+                    checkpoint_interval_steps=1000, checkpoint_time_s=3.84,
+                    seed=seed, handover=handover, replace=replace)
+
+
+def test_fleet_completes_and_conserves():
+    res = _mk_sim().run(8000)
+    assert res.steps_done >= 8000
+    assert res.revocations >= 0
+    assert res.total_time_s > 0
+    # no-revocation lower bound: N/sp + ckpt time
+    lower = 8000 / (4 * 4.56)
+    assert res.total_time_s >= lower
+
+
+def test_fleet_handover_never_slower():
+    """Chief handover removes recompute time vs stock identity-reuse."""
+    t_handover = np.mean([_mk_sim(s, True).run(6000).recompute_time_s
+                          for s in range(3)])
+    t_stock = np.mean([_mk_sim(s, False).run(6000).recompute_time_s
+                       for s in range(3)])
+    assert t_handover <= t_stock + 1e-9
+
+
+def test_fleet_no_replacement_slower():
+    fast = np.mean([_mk_sim(s, True, True).run(6000).total_time_s
+                    for s in range(3)])
+    slow = np.mean([_mk_sim(s, True, False).run(6000).total_time_s
+                    for s in range(3)])
+    assert fast <= slow + 1e-9
