@@ -1,14 +1,18 @@
 """Benchmark driver — one module per paper table/figure (+ the roofline).
 Prints ``name,value,derived`` CSV rows; tee'd to bench_output.txt by CI.
 
-PYTHONPATH=src python -m benchmarks.run [--only table2_speed_models,...]
+    PYTHONPATH=src python -m benchmarks.run [--only table2_speed_models,...]
+    python -m repro bench --only table1_speed,fig2_stability
+
+Exit status is nonzero when ANY selected module raises (or an --only name
+is unknown), so CI can gate on it; per-module tracebacks go to stderr.
 """
 from __future__ import annotations
 
-import argparse
 import sys
 import time
 import traceback
+from typing import List, Optional
 
 MODULES = [
     "table1_speed",
@@ -32,41 +36,59 @@ MODULES = [
 ]
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="")
-    args = ap.parse_args()
-    only = set(args.only.split(",")) if args.only else None
+def _run_module(name: str) -> List[dict]:
+    mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+    if name == "roofline":
+        return [{"name": f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                 "value": round(r.get("roofline_fraction", 0.0), 4),
+                 "derived": (f"bottleneck={r.get('bottleneck')} "
+                             f"compute={r.get('compute_s', 0):.4f}s")}
+                for r in mod.run()
+                if not r.get("skipped") and not r.get("failed")]
+    return mod.run()
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    # shared CLI helper (PYTHONPATH=src / pip install -e . both work)
+    from repro.launch.cli import make_parser
+
+    ap = make_parser("benchmarks.run", "paper table/figure benchmark driver")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of benchmark modules")
+    ap.add_argument("--list", action="store_true",
+                    help="list module names and exit")
+    args = ap.parse_args(argv)
+    if args.list:
+        print("\n".join(MODULES))
+        return 0
+    only = [m for m in args.only.split(",") if m] if args.only else None
+    unknown = sorted(set(only or []) - set(MODULES))
+    if unknown:
+        print(f"unknown benchmark module(s): {', '.join(unknown)}",
+              file=sys.stderr)
+        return 2
+    selected = [m for m in MODULES if only is None or m in only]
 
     print("name,value,derived")
-    failures = 0
-    for name in MODULES:
-        if only and name not in only:
-            continue
+    failed: List[str] = []
+    for name in selected:
         t0 = time.time()
         try:
-            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            if name == "roofline":
-                rows = [{"name": f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
-                         "value": round(r.get("roofline_fraction", 0.0), 4),
-                         "derived": (f"bottleneck={r.get('bottleneck')} "
-                                     f"compute={r.get('compute_s', 0):.4f}s")}
-                        for r in mod.run()
-                        if not r.get("skipped") and not r.get("failed")]
-            else:
-                rows = mod.run()
+            rows = _run_module(name)
             for r in rows:
                 derived = str(r.get("derived", "")).replace(",", ";")
                 print(f"{r['name']},{r['value']},{derived}", flush=True)
             print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
         except Exception:
-            failures += 1
-            print(f"# {name} FAILED:", flush=True)
-            traceback.print_exc(file=sys.stdout)
-    if failures:
-        print(f"# {failures} benchmark module(s) failed")
-        sys.exit(1)
+            failed.append(name)
+            print(f"# {name} FAILED", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        print(f"# {len(failed)}/{len(selected)} benchmark module(s) failed: "
+              f"{', '.join(failed)}", flush=True)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,56 +1,49 @@
-"""Quickstart: pick an architecture, train a reduced config for a few steps
-on CPU, checkpoint, restore, and predict the run's wall-clock with Eq (4).
+"""Quickstart via the `repro.api.Session` facade: pick an architecture,
+train a reduced config for a few steps on CPU, checkpoint, restore, and
+predict the run's wall-clock with Eq (4) — the whole CM-DARE loop in ~30
+lines.
 
 PYTHONPATH=src python examples/quickstart.py --arch qwen3-1.7b --steps 20
 """
 from __future__ import annotations
 
-import argparse
 import tempfile
 
-import jax
-
-from repro.configs import ARCH_IDS, RunConfig, get_config
-from repro.core.perf_model.cluster_model import Eq4Inputs, predict_total_time
-from repro.core.trainer import TransientTrainer
-from repro.data.pipeline import ShardedLoader, SyntheticTokenSource
+from repro.api import Session
+from repro.launch import cli
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-1.7b", choices=ARCH_IDS)
-    ap.add_argument("--steps", type=int, default=20)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=64)
-    args = ap.parse_args()
+    p = cli.make_parser("quickstart", __doc__.splitlines()[0])
+    cli.add_arch_arg(p)
+    cli.add_batch_args(p)
+    p.add_argument("--steps", type=int, default=20)
+    args = p.parse_args()
 
-    cfg = get_config(args.arch, smoke=True)
-    print(f"arch={cfg.name} (reduced): {cfg.n_layers}L d={cfg.d_model} "
-          f"params={sum(p.size for p in jax.tree.leaves(__import__('repro.models.api', fromlist=['init']).init(cfg)[0])):,}")
+    session = Session.from_arch(
+        args.arch, total_steps=args.steps, warmup_steps=2, lr=1e-3,
+        zero1=False, checkpoint_interval=max(5, args.steps // 2))
+    info = session.describe()
+    print(f"arch={args.arch} (reduced): {info['n_layers']}L "
+          f"d={info['d_model']} params={info['params']:,}")
 
     with tempfile.TemporaryDirectory() as d:
-        run = RunConfig(total_steps=args.steps, warmup_steps=2,
-                        checkpoint_interval=max(5, args.steps // 2),
-                        checkpoint_dir=d, lr=1e-3, zero1=False)
-        src = SyntheticTokenSource(cfg.vocab_size, args.seq)
-        trainer = TransientTrainer(cfg, run, ShardedLoader(src, args.batch))
-        state, start = trainer.restore_or_init()
-        state, rep = trainer.run_steps(state, args.steps)
+        rep = session.train(args.steps, global_batch=args.global_batch,
+                            seq_len=args.seq, checkpoint_dir=d)
         print(f"loss {rep.losses[0]:.3f} -> {rep.losses[-1]:.3f} over "
               f"{rep.steps_run} steps at {rep.speed or 0:.2f} steps/s, "
               f"{rep.checkpoints} checkpoints")
 
-        state2, restored_step = trainer.restore_or_init()
+        # a fresh restore sees the latest committed checkpoint
+        _, restored_step = session.trainer.restore_or_init()
         print(f"restore: latest checkpoint at step {restored_step}")
 
-        # predict a hypothetical longer run with Eq (4)
-        sp = rep.speed or 1.0
-        pred = predict_total_time(sp, Eq4Inputs(
-            n_w=10 * args.steps, i_c=run.checkpoint_interval,
-            t_c=trainer.ckpt.last_save_seconds or 0.1,
-            t_p=60.0, t_s=15.0, revoke_probs=[0.1]))
-        print(f"Eq(4) predicted wall-clock for {10*args.steps} steps: "
-              f"{pred:.1f}s")
+        # predict a hypothetical 10x longer run on transient V100s, Eq (4)
+        pred = session.predict(n_workers=1, gpu="v100",
+                               steps=10 * args.steps)
+        print(f"Eq(4) predicted wall-clock for {10*args.steps} steps on "
+              f"1x{pred.gpu}: {pred.total_time_seconds:.1f}s "
+              f"(E[revocations]={pred.expected_revocations:.2f})")
 
 
 if __name__ == "__main__":

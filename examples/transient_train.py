@@ -1,7 +1,7 @@
-"""End-to-end driver: train a ~100M-param LM for a few hundred steps on a
-transient cluster with revocations sampled from the calibrated fleet model,
-checkpoint-lease handover, restore after a simulated chief loss, and Eq(4)
-prediction vs. actual wall-clock.
+"""End-to-end driver on the Session facade: train a ~100M-param LM for a few
+hundred steps on a transient cluster with revocations sampled from the
+calibrated fleet model, checkpoint-lease handover, restore after a simulated
+chief loss, and Eq(4) prediction vs. actual wall-clock.
 
 Default runs a CPU-sized slice of the workload (reduced width, short run) so
 it finishes in minutes; pass --full-100m for the real ~100M configuration.
@@ -10,19 +10,15 @@ PYTHONPATH=src python examples/transient_train.py --steps 300
 """
 from __future__ import annotations
 
-import argparse
 import math
 import tempfile
 import time
 
-import jax
-import numpy as np
-
+from repro.api import Session
 from repro.configs import ModelConfig, RunConfig
-from repro.core.trainer import MembershipEvent, TransientTrainer
+from repro.core.trainer import MembershipEvent
 from repro.core.transient.revocation import RevocationSampler
-from repro.data.pipeline import ShardedLoader, SyntheticTokenSource
-from repro.dist.elastic import Member
+from repro.launch import cli
 
 
 def lm_100m(full: bool) -> ModelConfig:
@@ -37,25 +33,26 @@ def lm_100m(full: bool) -> ModelConfig:
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--batch", type=int, default=16)
-    ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--members", type=int, default=4)
-    ap.add_argument("--full-100m", action="store_true")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    p = cli.make_parser("transient_train", __doc__.splitlines()[0])
+    p.add_argument("--steps", type=int, default=300)
+    cli.add_batch_args(p, batch_default=16, seq_default=128)
+    p.add_argument("--members", type=int, default=4)
+    p.add_argument("--full-100m", action="store_true")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
 
     cfg = lm_100m(args.full_100m)
-    n_params = sum(p.size for p in jax.tree.leaves(
-        __import__("repro.models.api", fromlist=["init"]).init(cfg)[0]))
-    print(f"model {cfg.name}: {n_params/1e6:.1f}M params")
+    run = RunConfig(total_steps=args.steps, warmup_steps=20,
+                    checkpoint_interval=max(20, args.steps // 6),
+                    lr=3e-4, zero1=False, seed=args.seed)
+    # a custom (non-registry) ModelConfig goes straight into Session
+    session = Session(cfg, run)
+    print(f"model {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
 
     # sample a revocation schedule from the calibrated fleet model: member i
     # is a preemptible v5e slice in us-central1 (v100 stats as proxy)
     samp = RevocationSampler(args.seed)
     events = []
-    run_hours = 0.5  # compress the 24h fleet timeline onto this short run
     for i in range(1, args.members):  # member 0 survives
         lt = samp.lifetime("us-central1", "v100")
         if math.isfinite(lt):
@@ -71,39 +68,47 @@ def main():
           f"from the fleet model: "
           f"{[(e.kind, e.step) for e in sorted(events, key=lambda e: e.step)]}")
 
+    # observe the run through the Session's event bus
+    session.bus.subscribe(
+        "epoch", lambda kind, ev: print(f"  [bus] step {ev['step']}: "
+                                        f"{ev['kind']} member "
+                                        f"{ev['member_id']} -> "
+                                        f"{ev['n_alive']} alive"))
+
     with tempfile.TemporaryDirectory() as d:
-        run = RunConfig(total_steps=args.steps, warmup_steps=20,
-                        checkpoint_interval=max(20, args.steps // 6),
-                        checkpoint_dir=d, lr=3e-4, zero1=False)
-        src = SyntheticTokenSource(cfg.vocab_size, args.seq, seed=args.seed)
-        trainer = TransientTrainer(
-            cfg, run, ShardedLoader(src, args.batch),
-            members=[Member(i) for i in range(args.members)])
-        state, _ = trainer.restore_or_init()
         t0 = time.monotonic()
         half = args.steps // 2
-        state, rep1 = trainer.run_steps(state, half, events=[
-            e for e in events if e.step < half])
+        rep1 = session.train(half, global_batch=args.global_batch,
+                             seq_len=args.seq, members=args.members,
+                             events=[e for e in events if e.step < half],
+                             checkpoint_dir=d)
         print(f"[phase 1] loss {rep1.losses[0]:.3f} -> {rep1.losses[-1]:.3f}, "
               f"{rep1.epochs} membership epochs, "
               f"{rep1.checkpoints} checkpoints, "
               f"{rep1.speed or 0:.2f} steps/s")
 
-        # simulate chief loss: a fresh trainer (new holder) restores and
-        # continues — the lease handover means no recomputation
-        trainer2 = TransientTrainer(cfg, run, ShardedLoader(src, args.batch),
-                                    holder="worker-replacement")
-        trainer2.ckpt.lease.notify_revoked()
-        state2, resumed = trainer2.restore_or_init()
-        lost = int(state.step) - resumed
-        print(f"[chief revoked] restored at step {resumed} "
+        # simulate chief loss: a fresh session (new lease holder) restores
+        # and continues — the lease handover means no recomputation
+        # reuse the subscribed bus so the observer sees phase-2 events too
+        session2 = Session(cfg, run, bus=session.bus)
+        # free the lease as the revocation notification would
+        from repro.checkpoint import Checkpointer, WriterLease
+        WriterLease(d, "worker-0").notify_revoked()
+        resumed_step = Checkpointer(d).latest_step() or 0
+        rep2 = session2.train(args.steps - resumed_step,
+                              global_batch=args.global_batch,
+                              seq_len=args.seq, members=args.members,
+                              events=[e for e in events
+                                      if e.step >= resumed_step],
+                              holder="worker-replacement",
+                              checkpoint_dir=d)
+        lost = half - resumed_step
+        print(f"[chief revoked] restored at step {resumed_step} "
               f"(recompute window {lost} steps, bounded by I_c="
               f"{run.checkpoint_interval})")
-        state2, rep2 = trainer2.run_steps(
-            state2, args.steps - resumed,
-            events=[e for e in events if e.step >= resumed])
         wall = time.monotonic() - t0
-        print(f"[phase 2] loss -> {rep2.losses[-1]:.3f}, total wall {wall:.1f}s")
+        print(f"[phase 2] loss -> {rep2.losses[-1]:.3f}, "
+              f"total wall {wall:.1f}s")
         full_losses = rep1.losses + rep2.losses
         assert full_losses[-1] < full_losses[0], "training must make progress"
         print(f"final loss {full_losses[-1]:.3f} "

@@ -9,7 +9,6 @@ Usage: python scripts/run_dryrun_sweep.py [--jobs 3] [--mesh both]
 """
 from __future__ import annotations
 
-import argparse
 import json
 import os
 import subprocess
@@ -58,7 +57,9 @@ def run_one(arch: str, shape: str, mesh: str, timeout: int):
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    from repro.launch.cli import make_parser
+    ap = make_parser("run_dryrun_sweep",
+                     "parallel (arch x shape) dry-run sweep, resumable")
     ap.add_argument("--jobs", type=int, default=3)
     ap.add_argument("--mesh", default="both")
     ap.add_argument("--timeout", type=int, default=3000)

@@ -1,0 +1,186 @@
+"""`python -m repro` — the CM-DARE command line, one shell over `repro.api`.
+
+    python -m repro train    --arch qwen3-1.7b --steps 5
+    python -m repro serve    --arch mamba2-1.3b --tokens 16
+    python -m repro plan     [--arch ...] --gpu v100 --workers 4
+    python -m repro simulate [--arch ...] --gpu v100 --workers 4
+    python -m repro predict  [--arch ...] --gpu v100 --workers 4
+    python -m repro bench    --only table1_speed,fig2_stability
+    python -m repro dryrun   --arch qwen3-1.7b --shape train_4k
+
+The old module launchers (`python -m repro.launch.train` etc.) remain as
+deprecation shims over the same Session facade.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from repro.launch import cli
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = cli.make_parser("repro", __doc__.splitlines()[0])
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    t = sub.add_parser("train", help="elastic transient-aware training")
+    cli.add_arch_arg(t)
+    cli.add_scale_args(t)
+    cli.add_batch_args(t)
+    cli.add_train_args(t)
+
+    s = sub.add_parser("serve", help="prefill + token-by-token decode")
+    cli.add_arch_arg(s)
+    cli.add_scale_args(s)
+    cli.add_serve_args(s)
+
+    for name, hlp in (("plan", "revocation-aware launch planning (§V-C)"),
+                      ("simulate", "discrete-event fleet simulation (§VI-A)"),
+                      ("predict", "Eq (4)/(5) end-to-end prediction")):
+        q = sub.add_parser(name, help=hlp)
+        cli.add_arch_arg(q)
+        cli.add_scale_args(q)
+        cli.add_fleet_args(q)
+        q.add_argument("--steps", type=int, default=2000)
+        q.add_argument("--checkpoint-interval", type=int, default=200)
+        if name == "plan":
+            # the planner's whole point is comparing regions: default to all
+            q.set_defaults(region=None)
+
+    b = sub.add_parser("bench", help="paper table/figure benchmark driver")
+    b.add_argument("--only", default="",
+                   help="comma-separated benchmark module subset")
+    b.add_argument("--list", action="store_true",
+                   help="list available benchmark modules and exit")
+
+    # `dryrun` is dispatched before argparse in main(): its flags are owned
+    # by repro.launch.dryrun, whose import must also happen first (it pins
+    # the XLA host-device count). Registered here for `--help` only.
+    sub.add_parser("dryrun", help="AOT lower/compile on production meshes "
+                                  "(512 host devices); flags forwarded to "
+                                  "repro.launch.dryrun", add_help=False)
+    return p
+
+
+# ----------------------------------------------------------------- handlers
+def _cmd_train(args) -> int:
+    from repro.core.trainer import MembershipEvent
+
+    session = cli.session_from_args(args)
+    events = []
+    if args.revoke_at and args.members > 1:
+        events.append(MembershipEvent(step=args.revoke_at, kind="revoke",
+                                      member_id=args.members - 1))
+    rep = session.train(args.steps, global_batch=args.global_batch,
+                        seq_len=args.seq, members=args.members,
+                        events=events, checkpoint_dir=args.checkpoint_dir)
+    print(f"arch={args.arch} steps={rep.steps_run} "
+          f"loss {rep.losses[0]:.3f}->{rep.losses[-1]:.3f} "
+          f"speed={rep.speed or 0:.2f} steps/s epochs={rep.epochs} "
+          f"checkpoints={rep.checkpoints}")
+    return 0
+
+
+def _cmd_serve(args) -> int:
+    # encoder-only archs raise ValueError in serving.generate; main()
+    # renders it as a clean error + exit 2
+    session = cli.session_from_args(args)
+    rep = session.serve(args.tokens, batch=args.batch,
+                        prompt_len=args.prompt_len,
+                        temperature=args.temperature, seed=args.seed)
+    print(f"arch={args.arch} batch={rep.batch} "
+          f"prefill {rep.prompt_len} tok in {rep.prefill_seconds:.2f}s; "
+          f"decode {rep.tokens_generated} tok in {rep.decode_seconds:.2f}s "
+          f"({rep.tokens_per_second:.1f} tok/s)")
+    print("sample tokens:", rep.sample_tokens)
+    return 0
+
+
+def _cmd_plan(args) -> int:
+    session = cli.session_from_args(args)
+    best, plans = session.plan(gpu=args.gpu, n_workers=args.workers,
+                               steps=args.steps,
+                               checkpoint_interval=args.checkpoint_interval,
+                               region=args.region, seed=args.seed)
+    where = args.region or "all regions"
+    print(f"arch={session.arch} gpu={args.gpu} workers={args.workers} "
+          f"({where}): scored {len(plans)} (region, hour) cells")
+    print(f"best: {best.region} @ {best.launch_hour:02d}h  "
+          f"E[revocations]={best.expected_revocations:.2f}  "
+          f"E[time]={best.expected_time_s:.0f}s  "
+          f"E[cost]=${best.expected_cost:.2f}")
+    return 0
+
+
+def _cmd_simulate(args) -> int:
+    session = cli.session_from_args(args)
+    res = session.simulate(n_workers=args.workers, gpu=args.gpu,
+                           region=args.region, steps=args.steps,
+                           checkpoint_interval=args.checkpoint_interval,
+                           n_ps=args.n_ps, seed=args.seed)
+    print(f"arch={session.arch} {args.workers}x{args.gpu} in {args.region}: "
+          f"{res.steps_done} steps in {res.total_time_s:.0f}s  "
+          f"revocations={res.revocations} replacements={res.replacements} "
+          f"ckpt={res.checkpoint_time_s:.0f}s cost=${res.monetary_cost:.2f}")
+    return 0
+
+
+def _cmd_predict(args) -> int:
+    session = cli.session_from_args(args)
+    rep = session.predict(n_workers=args.workers, gpu=args.gpu,
+                          region=args.region, steps=args.steps,
+                          checkpoint_interval=args.checkpoint_interval,
+                          n_ps=args.n_ps, seed=args.seed)
+    print(f"arch={rep.arch} {rep.n_workers}x{rep.gpu} in {rep.region}: "
+          f"worker {rep.worker_speed:.2f} steps/s, cluster "
+          f"{rep.cluster_speed:.2f} steps/s"
+          f"{' (PS-bottlenecked)' if rep.ps_bottlenecked else ''}")
+    print(f"Eq(4): {rep.total_time_seconds:.0f}s for {args.steps} steps  "
+          f"(T_c={rep.checkpoint_seconds:.2f}s, "
+          f"E[revocations]={rep.expected_revocations:.2f})")
+    return 0
+
+
+def _cmd_bench(args) -> int:
+    try:
+        from benchmarks import run as bench_run
+    except ImportError as e:
+        print("benchmarks package not importable — run from the repo root "
+              f"({e})", file=sys.stderr)
+        return 2
+    if args.list:
+        print("\n".join(bench_run.MODULES))
+        return 0
+    return bench_run.main(["--only", args.only] if args.only else [])
+
+
+def _cmd_dryrun(rest: List[str]) -> int:
+    from repro.launch import dryrun
+    dryrun.main(rest)
+    return 0
+
+
+_HANDLERS = {
+    "train": _cmd_train, "serve": _cmd_serve, "plan": _cmd_plan,
+    "simulate": _cmd_simulate, "predict": _cmd_predict,
+    "bench": _cmd_bench,
+}
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv[:1] == ["dryrun"]:
+        return _cmd_dryrun(argv[1:])
+    args = build_parser().parse_args(argv)
+    try:
+        return _HANDLERS[args.cmd](args)
+    except ValueError as e:
+        # domain validation (e.g. a (region, gpu) pair the paper's fleet
+        # never offered) — report cleanly, not as a traceback
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

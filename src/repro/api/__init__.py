@@ -1,0 +1,13 @@
+"""`repro.api` — the unified programmatic surface of the CM-DARE stack.
+
+    from repro.api import Session
+    s = Session.from_arch("qwen3-1.7b")
+    s.plan(...); s.simulate(...); s.train(...); s.predict(...); s.serve(...)
+
+See `repro.api.session` for the full facade, `repro.api.events` for the
+observation bus, `repro.api.serving` for the decode loop. The `python -m
+repro` CLI (`repro.__main__`) is a thin shell over this package.
+"""
+from repro.api.events import Event, EventBus  # noqa: F401
+from repro.api.serving import ServeReport, generate  # noqa: F401
+from repro.api.session import PredictionReport, Session  # noqa: F401

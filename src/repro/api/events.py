@@ -1,0 +1,57 @@
+"""Tiny synchronous event bus wiring the Session facade to the runtime.
+
+The trainer (and any future provider/backend) emits flat `(kind, payload)`
+events; the Session forwards them onto a bus so callers can observe a run
+without threading callbacks through every layer. Kinds emitted today:
+
+  step        {step, loss}
+  epoch       {step, kind, member_id, epoch, n_alive}
+  checkpoint  {step, sizes}
+  detection   {step, bottleneck, action, deviation}
+  restore     {step}
+
+Subscribe to a specific kind or to "*" for everything. Handlers run inline
+on the training thread — keep them cheap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Any, Callable, Dict, List, Tuple
+
+Handler = Callable[[str, Dict[str, Any]], None]
+
+
+@dataclasses.dataclass
+class Event:
+    kind: str
+    payload: Dict[str, Any]
+
+
+class EventBus:
+    def __init__(self, keep_history: int = 10_000):
+        self._subs: Dict[str, List[Handler]] = defaultdict(list)
+        self._keep = keep_history
+        self.history: List[Event] = []
+
+    def subscribe(self, kind: str, handler: Handler) -> Handler:
+        """Register `handler` for `kind` ("*" = all). Returns the handler so
+        this can be used as a decorator via `bus.on(kind)`."""
+        self._subs[kind].append(handler)
+        return handler
+
+    def on(self, kind: str) -> Callable[[Handler], Handler]:
+        return lambda fn: self.subscribe(kind, fn)
+
+    def emit(self, kind: str, /, **payload: Any) -> None:
+        # `kind` is positional-only so payloads may themselves carry a
+        # "kind" key (e.g. the trainer's epoch events)
+        if self._keep:
+            self.history.append(Event(kind, payload))
+            if len(self.history) > self._keep:
+                del self.history[: len(self.history) - self._keep]
+        for handler in (*self._subs.get(kind, ()), *self._subs.get("*", ())):
+            handler(kind, payload)
+
+    def of_kind(self, kind: str) -> List[Event]:
+        return [e for e in self.history if e.kind == kind]

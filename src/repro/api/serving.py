@@ -1,0 +1,75 @@
+"""Programmatic serving loop: batched prefill + token-by-token decode
+against the KV cache / SSM state. Extracted from the old `launch/serve.py`
+launcher so `Session.serve` and the CLI share one implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+
+
+@dataclasses.dataclass
+class ServeReport:
+    arch: str
+    batch: int
+    prompt_len: int
+    tokens_generated: int
+    prefill_seconds: float
+    decode_seconds: float
+    tokens_per_second: float
+    sample_tokens: List[int]
+    generated: object  # (batch, tokens) array
+
+
+def generate(cfg: ModelConfig, params=None, *, batch: int = 4,
+             prompt_len: int = 32, tokens: int = 16,
+             temperature: float = 0.0, seed: int = 1,
+             prompt=None) -> ServeReport:
+    """Prefill a (random or given) prompt via repeated decode — cache-
+    consistent for every family — then sample `tokens` new tokens."""
+    if cfg.family == "audio":
+        raise ValueError("encoder-only arch has no decode path")
+    if params is None:
+        params, _ = api.init(cfg, jax.random.PRNGKey(0))
+    max_len = prompt_len + tokens
+    state, _ = api.init_decode_state(cfg, batch, max_len)
+
+    key = jax.random.PRNGKey(seed)
+    if prompt is None:
+        prompt = jax.random.randint(key, (batch, prompt_len), 0,
+                                    cfg.vocab_size)
+
+    step = jax.jit(lambda p, s, t, i: api.decode_step(p, cfg, s, t, i))
+
+    t0 = time.monotonic()
+    logits = None
+    for i in range(prompt_len):
+        logits, state = step(params, state, prompt[:, i], jnp.int32(i))
+    prefill_s = time.monotonic() - t0
+
+    toks = jnp.argmax(logits, -1)
+    out = [toks]
+    t0 = time.monotonic()
+    for i in range(tokens - 1):
+        logits, state = step(params, state, toks, jnp.int32(prompt_len + i))
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            toks = jax.random.categorical(sub, logits / temperature, -1)
+        else:
+            toks = jnp.argmax(logits, -1)
+        out.append(toks)
+    decode_s = time.monotonic() - t0
+    gen = jnp.stack(out, 1)
+    return ServeReport(
+        arch=cfg.name, batch=batch, prompt_len=prompt_len,
+        tokens_generated=tokens, prefill_seconds=prefill_s,
+        decode_seconds=decode_s,
+        tokens_per_second=tokens * batch / max(decode_s, 1e-9),
+        sample_tokens=gen[0, :10].tolist(), generated=gen)

@@ -1,0 +1,309 @@
+"""`Session` — the single programmatic surface for the CM-DARE loop.
+
+The paper's framework (Fig 1) is measure -> model -> mitigate; this facade
+exposes it as one object so launchers, examples, benchmarks and notebooks
+stop hand-wiring configs -> models -> trainer -> perf models -> fleet sim:
+
+    s = Session.from_arch("qwen3-1.7b")
+    plan = s.plan(gpu="v100", n_workers=4)          # §V-C launch planner
+    sim = s.simulate(n_workers=4, gpu="v100")       # §VI-A fleet simulator
+    pred = s.predict(n_workers=4, gpu="v100")       # Eq (4)/(5) + §III models
+    rep = s.train(steps=50)                         # elastic trainer + bus
+    out = s.serve(tokens=16)                        # prefill/decode loop
+
+All run-shaped knobs default from the Session's `RunConfig`; every method
+takes overrides. Training wires the profiler + bottleneck Controller through
+the Session's `EventBus` (`session.bus.subscribe("step", fn)` etc.).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs import ARCH_IDS, RunConfig, get_config
+from repro.configs.base import ModelConfig
+from repro.api.events import EventBus
+from repro.api.serving import ServeReport, generate
+from repro.core.perf_model.cluster_model import (Eq4Inputs, PSBottleneckModel,
+                                                 WorkerSpec, cluster_speed,
+                                                 expected_revocations,
+                                                 predict_total_time)
+from repro.core.perf_model.features import GPU_SPECS
+from repro.core.perf_model.speed_model import calibrate_generators
+from repro.core.scheduler import LaunchPlan, plan_launch
+from repro.core.trainer import MembershipEvent, TrainReport, TransientTrainer
+from repro.core.transient.fleet import FleetSim, SimResult, SimWorker
+from repro.core.transient.replacement import ReplacementModel
+from repro.core.transient.revocation import REGION_GPU_PARAMS
+from repro.core.transient.startup import StartupModel
+from repro.data.pipeline import ShardedLoader, source_for_config
+from repro.dist.elastic import Member
+
+# Sequential-checkpoint write bandwidth assumed when no measurement is
+# available yet (§IV: T_c scales ~linearly with checkpoint size).
+_CKPT_BYTES_PER_S = 200e6
+_CKPT_BASE_S = 0.25
+
+
+@dataclasses.dataclass
+class PredictionReport:
+    """Composed §III/§IV/§V predictions for one (model, cluster) pairing."""
+    arch: str
+    gpu: str
+    region: str
+    n_workers: int
+    model_gflops: float
+    model_bytes: float
+    worker_speed: float          # steps/s solo (§III predictor)
+    cluster_speed: float         # steps/s, PS-capped (Fig 4)
+    ps_bottlenecked: bool
+    checkpoint_seconds: float    # T_c (§IV)
+    provision_seconds: float     # T_p (§V-B)
+    replacement_seconds: float   # T_s (Fig 10)
+    expected_revocations: float  # Eq (5)
+    total_time_seconds: float    # Eq (4)
+
+
+class Session:
+    """One model + run configuration, and every CM-DARE capability on it."""
+
+    def __init__(self, cfg: ModelConfig, run: Optional[RunConfig] = None,
+                 *, arch: Optional[str] = None, bus: Optional[EventBus] = None):
+        self.cfg = cfg
+        self.run = run or RunConfig()
+        self.arch = arch or cfg.name
+        self.bus = bus or EventBus()
+        self.trainer: Optional[TransientTrainer] = None
+        self.last_report: Optional[TrainReport] = None
+        self._last_state = None     # final TrainState of the last train()
+        self._gens = None           # lazily calibrated §III generators
+
+    # ------------------------------------------------------------ creation
+    @classmethod
+    def from_arch(cls, arch: str, *, smoke: bool = True,
+                  run: Optional[RunConfig] = None,
+                  bus: Optional[EventBus] = None,
+                  **run_overrides) -> "Session":
+        """Resolve a registered architecture id (see `repro.configs`).
+
+        `run_overrides` are `RunConfig` fields (lr, total_steps, ...).
+        """
+        if arch not in ARCH_IDS:
+            raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCH_IDS)}")
+        run = run or RunConfig()
+        if run_overrides:
+            run = dataclasses.replace(run, **run_overrides)
+        return cls(get_config(arch, smoke=smoke), run, arch=arch, bus=bus)
+
+    # ---------------------------------------------------------- model meta
+    def describe(self) -> Dict[str, object]:
+        cfg = self.cfg
+        return {
+            "arch": self.arch, "family": cfg.family,
+            "n_layers": cfg.n_layers, "d_model": cfg.d_model,
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+            "optimizer": self.run.optimizer,
+        }
+
+    def model_gflops(self, seq_len: Optional[int] = None,
+                     per_worker_batch: int = 8) -> float:
+        """C_m for the §III predictors: forward GFLOPs per worker step."""
+        seq = seq_len or 64
+        return self.cfg.flops_per_token(seq) * seq * per_worker_batch / 1e9
+
+    def model_bytes(self) -> float:
+        """Checkpoint/update payload (fp32 params)."""
+        return 4.0 * self.cfg.param_count()
+
+    # ------------------------------------------------------ §III speed
+    def _generators(self):
+        if self._gens is None:
+            self._gens = calibrate_generators()
+        return self._gens
+
+    def _check_fleet(self, gpu: str, region: Optional[str] = None) -> None:
+        """The paper's fleet models only cover the measured GPUs and the
+        (region, gpu) offerings of Table V — fail with the options."""
+        gens = self._generators()
+        if gpu not in gens:
+            raise ValueError(f"no calibrated speed model for {gpu!r}; "
+                             f"available: {sorted(gens)}")
+        if region is not None and (region, gpu) not in REGION_GPU_PARAMS:
+            offered = sorted(r for r, g in REGION_GPU_PARAMS if g == gpu)
+            raise ValueError(f"({region!r}, {gpu!r}) is not offered in the "
+                             f"paper's fleet; regions with {gpu}: {offered}")
+
+    def predict_worker_speed(self, gpu: str = "v100",
+                             seq_len: Optional[int] = None,
+                             per_worker_batch: int = 8) -> float:
+        """Solo steps/s on `gpu` from the calibrated §III step-time model."""
+        self._check_fleet(gpu)
+        c_m = self.model_gflops(seq_len, per_worker_batch)
+        return 1.0 / self._generators()[gpu].step_time(c_m)
+
+    def checkpoint_seconds(self) -> float:
+        """T_c estimate (§IV linear law) until a measured value exists."""
+        if self.trainer is not None and self.trainer.ckpt.last_save_seconds:
+            return self.trainer.ckpt.last_save_seconds
+        return _CKPT_BASE_S + self.model_bytes() / _CKPT_BYTES_PER_S
+
+    # ------------------------------------------------------ §V-C planner
+    def plan(self, gpu: str = "v100", n_workers: int = 4,
+             steps: Optional[int] = None,
+             checkpoint_interval: Optional[int] = None,
+             t_c: Optional[float] = None,
+             hours: Optional[List[int]] = None,
+             region: Optional[str] = None,
+             seed: int = 0) -> Tuple[LaunchPlan, List[LaunchPlan]]:
+        """Revocation-aware (region, launch-hour) planning for this model.
+
+        `region=None` scores every region offering `gpu`; pass a region to
+        constrain the plan to it.
+        """
+        best, plans = plan_launch(
+            gpu, n_workers, self.predict_worker_speed(gpu),
+            n_w=self.run.total_steps if steps is None else steps,
+            i_c=(self.run.checkpoint_interval if checkpoint_interval is None
+                 else checkpoint_interval),
+            t_c=t_c if t_c is not None else self.checkpoint_seconds(),
+            hours=hours, seed=seed)
+        if region is not None:
+            self._check_fleet(gpu, region)
+            plans = [p for p in plans if p.region == region]
+            best = min(plans, key=lambda p: (p.expected_cost,
+                                             p.expected_time_s))
+        return best, plans
+
+    # ------------------------------------------------- §VI-A fleet sim
+    def simulate(self, n_workers: int = 4, gpu: str = "v100",
+                 region: str = "us-central1",
+                 counts: Optional[Dict[str, int]] = None,
+                 steps: Optional[int] = None,
+                 checkpoint_interval: Optional[int] = None,
+                 n_ps: int = 1, seed: int = 0, replace: bool = True,
+                 handover: bool = True,
+                 max_hours: float = 48.0) -> SimResult:
+        """Discrete-event simulation of one run on a transient cluster.
+
+        Either a homogeneous (`n_workers` x `gpu`) cluster or an explicit
+        heterogeneous `counts` mapping gpu -> count.
+        """
+        counts = counts or {gpu: n_workers}
+        for g in counts:
+            self._check_fleet(g, region)
+        n_steps = self.run.total_steps if steps is None else steps
+        i_c = (self.run.checkpoint_interval if checkpoint_interval is None
+               else checkpoint_interval)
+        t_c = self.checkpoint_seconds()
+        if i_c == 0:  # no checkpointing: one interval past the run's end
+            i_c, t_c = n_steps + 1, 0.0
+        c_m = self.model_gflops()
+        gens = self._generators()
+        workers, wid = [], 0
+        for g, n in counts.items():
+            for _ in range(n):
+                workers.append(SimWorker(wid, g, region,
+                                         1.0 / gens[g].step_time(c_m)))
+                wid += 1
+        sim = FleetSim(
+            workers, model_gflops=c_m, model_bytes=self.model_bytes(),
+            step_speed_of=lambda g: 1.0 / gens[g].step_time(c_m),
+            checkpoint_interval_steps=i_c, checkpoint_time_s=t_c, n_ps=n_ps,
+            seed=seed, replace=replace, handover=handover,
+            price_of={g: GPU_SPECS[g].transient_price for g in counts})
+        return sim.run(n_steps, max_hours=max_hours)
+
+    # ------------------------------------------------ Eq (4)/(5) predict
+    def predict(self, n_workers: int = 4, gpu: str = "v100",
+                region: str = "us-central1",
+                steps: Optional[int] = None,
+                checkpoint_interval: Optional[int] = None,
+                n_ps: int = 1, t_c: Optional[float] = None,
+                seed: int = 0) -> PredictionReport:
+        """Compose the §III speed, §IV checkpoint and §V revocation models
+        into the Eq (4) end-to-end wall-clock prediction."""
+        self._check_fleet(gpu, region)
+        n_w = self.run.total_steps if steps is None else steps
+        i_c = (self.run.checkpoint_interval if checkpoint_interval is None
+               else checkpoint_interval)
+        worker_speed = self.predict_worker_speed(gpu)
+        ps = PSBottleneckModel(self.model_bytes(), n_ps)
+        workers = [WorkerSpec(gpu, worker_speed)] * n_workers
+        sp = cluster_speed(workers, ps)
+        hours = n_w / sp / 3600.0
+        lifetime = REGION_GPU_PARAMS[(region, gpu)]
+        probs = [lifetime.prob_revoked_within(min(hours, 24.0))] * n_workers
+        t_c = t_c if t_c is not None else self.checkpoint_seconds()
+        if i_c == 0:  # no checkpointing: zero pauses, Eq (4) stays defined
+            i_c, t_c = n_w, 0.0
+        t_p = StartupModel(seed).mean_total(gpu)
+        t_s = ReplacementModel(seed).cold_start_s(self.model_gflops())
+        total = predict_total_time(sp, Eq4Inputs(n_w, i_c, t_c, t_p, t_s,
+                                                 probs))
+        return PredictionReport(
+            arch=self.arch, gpu=gpu, region=region, n_workers=n_workers,
+            model_gflops=self.model_gflops(),
+            model_bytes=self.model_bytes(), worker_speed=worker_speed,
+            cluster_speed=sp, ps_bottlenecked=ps.is_bottlenecked(workers),
+            checkpoint_seconds=t_c, provision_seconds=t_p,
+            replacement_seconds=t_s,
+            expected_revocations=expected_revocations(probs),
+            total_time_seconds=total)
+
+    # ----------------------------------------------------- elastic train
+    def train(self, steps: Optional[int] = None, *, global_batch: int = 8,
+              seq_len: int = 64,
+              members: int = 1,
+              events: Optional[List[MembershipEvent]] = None,
+              holder: str = "worker-0",
+              checkpoint_dir: Optional[str] = None,
+              predicted_speed: Optional[float] = None,
+              check_every: int = 10,
+              resume: bool = True) -> TrainReport:
+        """Run the transient-aware elastic trainer; profiler + Controller
+        observations stream onto `self.bus`.
+
+        `resume=True` restores from `checkpoint_dir` when a checkpoint
+        exists (lease permitting), which is how a replacement chief
+        continues a run (pass a new `holder`).
+        """
+        steps = self.run.total_steps if steps is None else steps
+        run = self.run
+        if checkpoint_dir is not None:
+            run = dataclasses.replace(run, checkpoint_dir=checkpoint_dir)
+        elif run.checkpoint_dir == RunConfig.checkpoint_dir:
+            # default path: keep resume-across-invocations but namespace by
+            # arch so different models never restore each other's trees
+            run = dataclasses.replace(
+                run, checkpoint_dir=os.path.join(run.checkpoint_dir,
+                                                 self.arch))
+        src = source_for_config(self.cfg, seq_len, seed=run.seed)
+        loader = ShardedLoader(src, global_batch)
+        trainer = TransientTrainer(
+            self.cfg, run, loader,
+            members=[Member(i) for i in range(members)], holder=holder,
+            predicted_speed=predicted_speed,
+            on_event=lambda kind, payload: self.bus.emit(kind, **payload))
+        self.trainer = trainer
+        # NOTE: `run` (with the resolved checkpoint_dir) lives on the
+        # trainer only — per-call overrides never mutate self.run
+        state, start = (trainer.restore_or_init() if resume
+                        else (trainer.init_state(), 0))
+        state, report = trainer.run_steps(state, steps, events=events,
+                                          check_every=check_every)
+        self._last_state = state
+        self.last_report = report
+        return report
+
+    # ------------------------------------------------------------- serve
+    def serve(self, tokens: int = 16, *, batch: int = 4,
+              prompt_len: int = 32, temperature: float = 0.0,
+              seed: int = 1) -> ServeReport:
+        # serve the exact final weights of the last train() (the trainer's
+        # checkpoint may lag by up to checkpoint_interval-1 steps)
+        params = (self._last_state.params
+                  if self._last_state is not None else None)
+        return generate(self.cfg, params, batch=batch, prompt_len=prompt_len,
+                        tokens=tokens, temperature=temperature, seed=seed)

@@ -58,10 +58,12 @@ class TransientTrainer:
     def __init__(self, cfg: ModelConfig, run: RunConfig, loader: ShardedLoader,
                  members: Optional[List[Member]] = None,
                  holder: str = "worker-0",
-                 predicted_speed: Optional[float] = None):
+                 predicted_speed: Optional[float] = None,
+                 on_event: Optional[Callable[[str, dict], None]] = None):
         self.cfg = cfg
         self.run = run
         self.loader = loader
+        self._emit = on_event or (lambda kind, payload: None)
         self.members = ElasticMembership(
             members or [Member(0)], loader.global_batch)
         self.profiler = PerformanceProfiler(window=10, warmup_steps=5,
@@ -85,6 +87,7 @@ class TransientTrainer:
             state, step = self.ckpt.restore(shapes)
             state = jax.tree.map(jnp.asarray, state)
             self.loader.step = step
+            self._emit("restore", {"step": step})
             return st.TrainState(state.params, state.opt,
                                  jnp.asarray(step, jnp.int32)), step
         except FileNotFoundError:
@@ -107,13 +110,23 @@ class TransientTrainer:
                 ev = events[ev_i]
                 ev_i += 1
                 if ev.kind == "revoke":
+                    if ev.member_id not in self.members:
+                        # stale schedule entry (member already gone — e.g. a
+                        # replayed fleet timeline after a restore): ignore
+                        continue
                     epoch = self.members.revoke(ev.member_id)
                     # revoked writer: lease handover (Fig 11 fix)
                     if not self.ckpt.lease.held_by_me():
                         self.ckpt.lease.notify_revoked()
                         self.ckpt.lease.try_acquire()
                 else:
+                    if ev.member_id in self.members:
+                        continue  # stale join (already present)
                     epoch = self.members.join(Member(ev.member_id, ev.gpu))
+                self._emit("epoch", {"step": step, "kind": ev.kind,
+                                     "member_id": ev.member_id,
+                                     "epoch": epoch.number,
+                                     "n_alive": len(epoch.members)})
                 if not epoch.members:
                     raise RuntimeError("all members revoked")
             # 2. data (global batch stays constant across membership changes)
@@ -124,18 +137,26 @@ class TransientTrainer:
             state, metrics = self._jit_step(state, batch)
             loss = float(metrics["loss"])
             losses.append(loss)
+            self._emit("step", {"step": step, "loss": loss})
             # 4. profile + detect
             self.profiler.record(step, loss=loss)
             if self.predicted_speed and step % check_every == 0 and step > 0:
                 det = self.controller.check(self.profiler,
                                             self.predicted_speed)
                 self.detections.append(det)
+                self._emit("detection", {"step": step,
+                                         "bottleneck": det.bottleneck,
+                                         "action": det.action.value,
+                                         "deviation": det.deviation})
             # 5. checkpoint
             if self.run.checkpoint_interval and \
                     (step + 1) % self.run.checkpoint_interval == 0:
-                if self.ckpt.save(step + 1, state,
-                                  metadata=self.loader.state()) is not None:
+                sizes = self.ckpt.save(step + 1, state,
+                                       metadata=self.loader.state())
+                if sizes is not None:
                     checkpoints += 1
+                    self._emit("checkpoint", {"step": step + 1,
+                                              "sizes": sizes})
         report = TrainReport(
             steps_run=n_steps, final_loss=losses[-1] if losses else float("nan"),
             losses=losses, speed=self.profiler.speed(),

@@ -54,12 +54,43 @@ class CIFARLikeSource:
         return {"images": x, "labels": y}
 
 
+@dataclasses.dataclass
+class SyntheticAudioSource:
+    """Frame-embedding stream for encoder (audio) archs: (features, labels)
+    deterministic per (seed, step, shard). Stands in for precomputed
+    HuBERT-style frontend frames."""
+    frontend_dim: int
+    vocab_size: int
+    seq_len: int
+    seed: int = 0
+
+    def batch(self, step: int, shard: int, n_shards: int,
+              batch_per_shard: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed + 13, step, shard]))
+        return {
+            "features": rng.normal(
+                0, 1, (batch_per_shard, self.seq_len, self.frontend_dim)
+            ).astype(np.float32),
+            "labels": rng.integers(
+                0, self.vocab_size, (batch_per_shard, self.seq_len)
+            ).astype(np.int32),
+        }
+
+
+def source_for_config(cfg, seq_len: int, seed: int = 0):
+    """Pick the synthetic source matching a ModelConfig's input modality."""
+    if cfg.family == "audio":
+        return SyntheticAudioSource(cfg.frontend_dim, cfg.vocab_size,
+                                    seq_len, seed=seed)
+    return SyntheticTokenSource(cfg.vocab_size, seq_len, seed=seed)
+
+
 class ShardedLoader:
     """Iterator facade with explicit state: (step,). Elastic-safe: shard
     count/batch come per-call so membership changes take effect next step."""
 
-    def __init__(self, source, global_batch: int, seed: int = 0,
-                 start_step: int = 0):
+    def __init__(self, source, global_batch: int, start_step: int = 0):
         self.source = source
         self.global_batch = global_batch
         self.step = start_step

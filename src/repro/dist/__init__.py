@@ -1,0 +1,19 @@
+"""`repro.dist` — the distributed-execution layer of the CM-DARE stack.
+
+Three deliberately small, orthogonal modules:
+
+* :mod:`repro.dist.sharding` — logical-axis -> mesh-axis resolution
+  (rule-sets, divisibility fallback, NamedSharding trees, and the
+  ``use_sharding`` context the models' ``constrain`` calls read).
+* :mod:`repro.dist.elastic` — transient-cluster membership: who is alive,
+  which membership epoch we are in, and how the fixed global batch is
+  re-split when workers are revoked or join (§V of the paper).
+* :mod:`repro.dist.compression` — gradient compression with error
+  feedback (bf16 / int8), for the bandwidth-bound PS regimes of §VI-B.
+
+Everything here is host-side metadata/bookkeeping; nothing allocates device
+memory at import time.
+"""
+from repro.dist.elastic import ElasticMembership, Epoch, Member  # noqa: F401
+from repro.dist.compression import ErrorFeedback  # noqa: F401
+from repro.dist import sharding  # noqa: F401

@@ -1,0 +1,65 @@
+"""Gradient compression with error feedback (§VI-B bandwidth mitigation).
+
+When the parameter-server (or all-reduce) link is the bottleneck, shrinking
+the update payload raises the PS capacity ceiling of
+`cluster_model.PSBottleneckModel`. Plain quantization biases SGD; *error
+feedback* (Karimireddy et al., 2019) folds each round's quantization
+residual into the next round's gradient, so the applied updates track the
+true gradient sum.
+
+Schemes:
+  * ``none`` — identity (residual stays zero);
+  * ``bf16`` — round-to-bfloat16 (2x smaller);
+  * ``int8`` — per-tensor symmetric int8 (4x smaller vs f32).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+SCHEMES = ("none", "bf16", "int8")
+_BYTES_PER_VALUE = {"none": 4.0, "bf16": 2.0, "int8": 1.0}
+
+
+def compression_ratio(scheme: str) -> float:
+    """Payload bytes per f32 gradient value (feeds the PS capacity model)."""
+    return _BYTES_PER_VALUE[scheme] / 4.0
+
+
+def _quantize(x: jnp.ndarray, scheme: str) -> jnp.ndarray:
+    """Lossy round-trip of one tensor (decompressed representation)."""
+    if scheme == "none":
+        return x
+    if scheme == "bf16":
+        return x.astype(jnp.bfloat16).astype(x.dtype)
+    # int8: per-tensor symmetric scale
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    return q * scale
+
+
+class ErrorFeedback:
+    """Stateless compressor + explicit residual tree (functional style, so
+    the residual can live in a checkpointable train state)."""
+
+    def __init__(self, scheme: str = "int8"):
+        if scheme not in SCHEMES:
+            raise ValueError(f"unknown scheme {scheme!r}; known: {SCHEMES}")
+        self.scheme = scheme
+
+    def init(self, params) -> Any:
+        """Zero residual tree shaped like `params` (f32)."""
+        return jax.tree.map(
+            lambda p: jnp.zeros(jnp.shape(p), jnp.float32), params)
+
+    def roundtrip(self, grads, residual) -> Tuple[Any, Any]:
+        """Compress (grads + residual); return (decompressed update,
+        new residual). The decompressed update is what the PS applies."""
+        corrected = jax.tree.map(
+            lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+        applied = jax.tree.map(
+            lambda c: _quantize(c, self.scheme), corrected)
+        new_residual = jax.tree.map(lambda c, a: c - a, corrected, applied)
+        return applied, new_residual

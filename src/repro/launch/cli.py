@@ -1,0 +1,104 @@
+"""Shared argparse wiring for every entry point.
+
+Before the API redesign each launcher/benchmark/example re-declared the same
+arch/batch/seq/seed/smoke flags with drifting defaults; this module is the
+single source of truth, used by `python -m repro` (repro/__main__.py), the
+`repro.launch.*` deprecation shims, `benchmarks/run.py` and the examples.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+from typing import Optional
+
+from repro.configs import ARCH_IDS, RunConfig
+
+
+def make_parser(prog: str, description: str) -> argparse.ArgumentParser:
+    return argparse.ArgumentParser(prog=prog, description=description)
+
+
+# --------------------------------------------------------------- arg groups
+def add_arch_arg(p: argparse.ArgumentParser, required: bool = False,
+                 default: Optional[str] = "qwen3-1.7b") -> None:
+    p.add_argument("--arch", choices=ARCH_IDS,
+                   required=required,
+                   default=None if required else default,
+                   help="architecture id (see repro.configs.registry)")
+
+
+def add_scale_args(p: argparse.ArgumentParser) -> None:
+    p.add_argument("--full", action="store_true",
+                   help="production config (TPU-sized); default is the "
+                        "reduced smoke config that runs on CPU")
+    p.add_argument("--seed", type=int, default=0)
+
+
+def add_batch_args(p: argparse.ArgumentParser, batch_default: int = 8,
+                   seq_default: int = 64) -> None:
+    p.add_argument("--global-batch", type=int, default=batch_default)
+    p.add_argument("--seq", type=int, default=seq_default)
+
+
+def add_train_args(p: argparse.ArgumentParser,
+                   steps_default: int = 50) -> None:
+    p.add_argument("--steps", type=int, default=steps_default)
+    p.add_argument("--lr", type=float, default=1e-3)
+    p.add_argument("--optimizer", default="adamw")
+    # None = let Session pick the arch-namespaced default; an explicit
+    # value (even the default path) is honored verbatim
+    p.add_argument("--checkpoint-dir", default=None)
+    p.add_argument("--checkpoint-interval", type=int, default=20)
+    p.add_argument("--members", type=int, default=2)
+    p.add_argument("--revoke-at", type=int, default=0,
+                   help="inject a revocation at this step (0 = none)")
+    p.add_argument("--master-weights", action="store_true")
+
+
+def add_serve_args(p: argparse.ArgumentParser) -> None:
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--tokens", type=int, default=16)
+    p.add_argument("--temperature", type=float, default=0.0)
+
+
+def add_fleet_args(p: argparse.ArgumentParser,
+                   workers_default: int = 4) -> None:
+    # only the paper's measured GPUs have calibrated speed/revocation
+    # models (v5e is the TPU serving/training chip, not a fleet offering)
+    p.add_argument("--gpu", default="v100", choices=("k80", "p100", "v100"))
+    p.add_argument("--region", default="us-central1")
+    p.add_argument("--workers", type=int, default=workers_default)
+    p.add_argument("--n-ps", type=int, default=1)
+
+
+# ------------------------------------------------------------- constructors
+def run_config_from_args(args: argparse.Namespace) -> RunConfig:
+    """RunConfig from the add_train_args/add_scale_args namespace; absent
+    attributes fall back to RunConfig defaults."""
+    base = RunConfig()
+    fields = {f.name for f in dataclasses.fields(RunConfig)}
+    picked = {}
+    # checkpoint_dir is intentionally NOT mapped: handlers pass
+    # args.checkpoint_dir to Session.train directly, so None (unset) and an
+    # explicit path — even one equal to the RunConfig default — stay distinct
+    mapping = {
+        "optimizer": "optimizer", "lr": "lr",
+        "total_steps": "steps", "checkpoint_interval": "checkpoint_interval",
+        "master_weights": "master_weights", "seed": "seed",
+    }
+    for field, attr in mapping.items():
+        if field in fields and getattr(args, attr, None) is not None:
+            picked[field] = getattr(args, attr)
+    if "total_steps" in picked:
+        picked["warmup_steps"] = max(1, picked["total_steps"] // 10)
+    picked["zero1"] = False  # single-host CPU path; dryrun covers zero1
+    return dataclasses.replace(base, **picked)
+
+
+def session_from_args(args: argparse.Namespace):
+    """Build a `repro.api.Session` from a parsed namespace."""
+    from repro.api import Session
+    return Session.from_arch(args.arch,
+                             smoke=not getattr(args, "full", False),
+                             run=run_config_from_args(args))

@@ -10,7 +10,7 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 # Usage:
 #   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
 #       --shape train_4k --mesh single --out artifacts/q3_train.json
-import argparse
+
 import json
 import re
 import time
@@ -144,8 +144,17 @@ def model_flops(cfg, shape) -> float:
     return 2.0 * n_active * shape.global_batch
 
 
-def _cost_of(compiled) -> Dict[str, float]:
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """compiled.cost_analysis() returns a dict on recent jax and a
+    per-program list on jax<0.5 — normalize to one dict."""
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def _cost_of(compiled) -> Dict[str, float]:
+    ca = cost_analysis_dict(compiled)
     coll = collective_stats(compiled.as_text())
     return {
         "flops": float(ca.get("flops", 0.0)),
@@ -253,7 +262,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     compiled = lowered.compile()
     rec["compile_s"] = round(time.time() - t0, 2)
 
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     rec["flops_per_device"] = float(ca.get("flops", 0.0))
     rec["bytes_per_device"] = float(ca.get("bytes accessed", 0.0))
     try:
@@ -313,9 +322,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     return rec
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+def main(argv=None) -> None:
+    from repro.launch import cli
+    ap = cli.make_parser("repro.launch.dryrun",
+                         "AOT lower/compile (arch x shape) cells on the "
+                         "production meshes")
+    cli.add_arch_arg(ap, required=True)
     ap.add_argument("--shape", required=True)
     ap.add_argument("--mesh", choices=("single", "multi", "both"),
                     default="both")
@@ -327,7 +339,7 @@ def main() -> None:
     ap.add_argument("--microbatch", type=int, default=0)
     ap.add_argument("--kv-quant", action="store_true")
     ap.add_argument("--out", default="")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if SHAPES[args.shape] not in valid_cells(cfg):

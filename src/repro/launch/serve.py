@@ -1,68 +1,38 @@
-"""Serving launcher: batched prefill + token-by-token decode against the KV
-cache / SSM state for any `--arch` (reduced config on CPU).
+"""DEPRECATED serving launcher — prefer ``python -m repro serve``.
 
-PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b --tokens 16
+Thin shim over `repro.api.serving.generate` (shared with `Session.serve`);
+kept so ``python -m repro.launch.serve --arch mamba2-1.3b`` keeps working.
 """
 from __future__ import annotations
 
-import argparse
-import time
+import sys
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import ARCH_IDS, get_config
-from repro.models import api
+from repro.launch import cli
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--tokens", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
+def main() -> None:
+    p = cli.make_parser("repro.launch.serve",
+                        "DEPRECATED: use `python -m repro serve`")
+    cli.add_arch_arg(p, required=True)
+    cli.add_scale_args(p)
+    cli.add_serve_args(p)
+    args = p.parse_args()
+    print("note: `python -m repro.launch.serve` is deprecated; "
+          "use `python -m repro serve`", file=sys.stderr)
 
-    cfg = get_config(args.arch, smoke=True)
-    if cfg.family == "audio":
-        raise SystemExit("encoder-only arch has no decode path")
-    params, _ = api.init(cfg, jax.random.PRNGKey(0))
-    max_len = args.prompt_len + args.tokens
-    state, _ = api.init_decode_state(cfg, args.batch, max_len)
-
-    key = jax.random.PRNGKey(1)
-    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                cfg.vocab_size)
-
-    step = jax.jit(lambda p, s, t, i: api.decode_step(p, cfg, s, t, i))
-
-    # prefill via repeated decode (cache-consistent for every family)
-    t0 = time.monotonic()
-    logits = None
-    for i in range(args.prompt_len):
-        logits, state = step(params, state, prompt[:, i], jnp.int32(i))
-    prefill_s = time.monotonic() - t0
-
-    toks = jnp.argmax(logits, -1)
-    out = [toks]
-    t0 = time.monotonic()
-    for i in range(args.tokens - 1):
-        logits, state = step(params, state, toks,
-                             jnp.int32(args.prompt_len + i))
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            toks = jax.random.categorical(sub, logits / args.temperature, -1)
-        else:
-            toks = jnp.argmax(logits, -1)
-        out.append(toks)
-    decode_s = time.monotonic() - t0
-    gen = jnp.stack(out, 1)
-    print(f"arch={args.arch} batch={args.batch} "
-          f"prefill {args.prompt_len} tok in {prefill_s:.2f}s; "
-          f"decode {args.tokens} tok in {decode_s:.2f}s "
-          f"({args.tokens * args.batch / max(decode_s, 1e-9):.1f} tok/s)")
-    print("sample tokens:", gen[0, :10].tolist())
+    from repro.api import Session
+    session = Session.from_arch(args.arch, smoke=not args.full)
+    try:
+        rep = session.serve(args.tokens, batch=args.batch,
+                            prompt_len=args.prompt_len,
+                            temperature=args.temperature, seed=args.seed)
+    except ValueError as e:  # e.g. encoder-only arch has no decode path
+        raise SystemExit(f"error: {e}")
+    print(f"arch={args.arch} batch={rep.batch} "
+          f"prefill {rep.prompt_len} tok in {rep.prefill_seconds:.2f}s; "
+          f"decode {rep.tokens_generated} tok in {rep.decode_seconds:.2f}s "
+          f"({rep.tokens_per_second:.1f} tok/s)")
+    print("sample tokens:", rep.sample_tokens)
 
 
 if __name__ == "__main__":

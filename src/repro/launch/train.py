@@ -1,81 +1,42 @@
-"""Training launcher: `--arch <id>` + run hyperparameters -> transient-aware
-elastic training with checkpointing, profiling and bottleneck detection.
+"""DEPRECATED training launcher — prefer ``python -m repro train``.
 
-On this CPU container it trains the REDUCED (smoke) config by default;
-`--full` selects the production config (for real TPU pods).
-
-PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --steps 50
+Kept as a thin shim over `repro.api.Session` so existing invocations of
+``python -m repro.launch.train --arch qwen3-1.7b --steps 50`` keep working;
+all argument wiring lives in `repro.launch.cli` and the run itself in the
+Session facade.
 """
 from __future__ import annotations
 
-import argparse
+import sys
 
-import jax
-
-from repro.configs import ARCH_IDS, RunConfig, get_config
-from repro.core.trainer import MembershipEvent, TransientTrainer
-from repro.data.pipeline import ShardedLoader, SyntheticTokenSource
-from repro.dist.elastic import Member
+from repro.core.trainer import MembershipEvent
+from repro.launch import cli
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
-    ap.add_argument("--steps", type=int, default=50)
-    ap.add_argument("--global-batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=64)
-    ap.add_argument("--lr", type=float, default=1e-3)
-    ap.add_argument("--optimizer", default="adamw")
-    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
-    ap.add_argument("--checkpoint-interval", type=int, default=20)
-    ap.add_argument("--members", type=int, default=2)
-    ap.add_argument("--revoke-at", type=int, default=0,
-                    help="inject a revocation at this step (0 = none)")
-    ap.add_argument("--master-weights", action="store_true")
-    ap.add_argument("--full", action="store_true",
-                    help="production config (TPU-sized)")
-    args = ap.parse_args()
+def main() -> None:
+    p = cli.make_parser("repro.launch.train",
+                        "DEPRECATED: use `python -m repro train`")
+    cli.add_arch_arg(p, required=True)
+    cli.add_scale_args(p)
+    cli.add_batch_args(p)
+    cli.add_train_args(p)
+    args = p.parse_args()
+    print("note: `python -m repro.launch.train` is deprecated; "
+          "use `python -m repro train`", file=sys.stderr)
 
-    cfg = get_config(args.arch, smoke=not args.full)
-    if cfg.family == "audio":
+    session = cli.session_from_args(args)
+    if session.cfg.family == "audio":
         print("note: encoder arch trains masked-prediction on frame stubs")
-    run = RunConfig(optimizer=args.optimizer, lr=args.lr,
-                    warmup_steps=max(1, args.steps // 10),
-                    total_steps=args.steps,
-                    checkpoint_interval=args.checkpoint_interval,
-                    checkpoint_dir=args.checkpoint_dir, zero1=False,
-                    master_weights=args.master_weights)
-    if cfg.family == "audio":
-        from repro.models import api
-
-        class AudioSource:
-            def __init__(self, cfg, seq):
-                self.cfg, self.seq = cfg, seq
-
-            def batch(self, step, shard, n_shards, per):
-                import numpy as np
-                rng = np.random.default_rng((step, shard))
-                return {
-                    "features": rng.normal(
-                        0, 1, (per, self.seq, self.cfg.frontend_dim)
-                    ).astype(np.float32),
-                    "labels": rng.integers(
-                        0, self.cfg.vocab_size, (per, self.seq)
-                    ).astype(np.int32),
-                }
-        src = AudioSource(cfg, args.seq)
-    else:
-        src = SyntheticTokenSource(cfg.vocab_size, args.seq)
-    trainer = TransientTrainer(cfg, run, ShardedLoader(src, args.global_batch),
-                               members=[Member(i) for i in range(args.members)])
-    state, start = trainer.restore_or_init()
-    if start:
-        print(f"resumed from checkpoint at step {start}")
     events = []
     if args.revoke_at and args.members > 1:
         events.append(MembershipEvent(step=args.revoke_at, kind="revoke",
                                       member_id=args.members - 1))
-    state, rep = trainer.run_steps(state, args.steps, events=events)
+    rep = session.train(args.steps, global_batch=args.global_batch,
+                        seq_len=args.seq, members=args.members,
+                        events=events, checkpoint_dir=args.checkpoint_dir)
+    if session.bus.of_kind("restore"):
+        print(f"resumed from checkpoint at step "
+              f"{session.bus.of_kind('restore')[0].payload['step']}")
     print(f"arch={args.arch} steps={rep.steps_run} "
           f"loss {rep.losses[0]:.3f}->{rep.losses[-1]:.3f} "
           f"speed={rep.speed or 0:.2f} steps/s epochs={rep.epochs} "

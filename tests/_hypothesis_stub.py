@@ -1,0 +1,130 @@
+"""Minimal, deterministic stand-in for `hypothesis` when it is not
+installed (this container has no network; the real package wins whenever it
+is importable — see conftest.py).
+
+Supports exactly the subset the test-suite uses:
+  * strategies: integers, floats, sampled_from, lists
+  * @given(*strategies, **strategies)
+  * @settings(max_examples=..., deadline=...)
+
+Semantics: each @given test runs against boundary examples (all-min,
+all-max) plus a fixed number of seeded pseudo-random draws — deterministic
+across runs, so failures reproduce.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+from typing import Any, List
+
+_RANDOM_EXAMPLES = 8
+
+
+class _Strategy:
+    def examples(self, rng: random.Random) -> List[Any]:
+        raise NotImplementedError
+
+    def draw(self, rng: random.Random) -> Any:
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def examples(self, rng):
+        return [self.lo, self.hi]
+
+    def draw(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(_Strategy):
+    def __init__(self, lo: float, hi: float, **_kw):
+        self.lo, self.hi = float(lo), float(hi)
+
+    def examples(self, rng):
+        return [self.lo, self.hi]
+
+    def draw(self, rng):
+        return rng.uniform(self.lo, self.hi)
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, choices):
+        self.choices = list(choices)
+
+    def examples(self, rng):
+        return [self.choices[0], self.choices[-1]]
+
+    def draw(self, rng):
+        return rng.choice(self.choices)
+
+
+class _Lists(_Strategy):
+    def __init__(self, elem: _Strategy, min_size: int = 0,
+                 max_size: int = 10, **_kw):
+        self.elem, self.min_size, self.max_size = elem, min_size, max_size
+
+    def examples(self, rng):
+        return [[self.elem.draw(rng) for _ in range(self.min_size)],
+                [self.elem.draw(rng) for _ in range(self.max_size)]]
+
+    def draw(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elem.draw(rng) for _ in range(n)]
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = lambda lo, hi: _Integers(lo, hi)
+strategies.floats = lambda lo, hi, **kw: _Floats(lo, hi, **kw)
+strategies.sampled_from = lambda choices: _SampledFrom(choices)
+strategies.lists = lambda elem, **kw: _Lists(elem, **kw)
+
+
+def given(*arg_strats: _Strategy, **kw_strats: _Strategy):
+    def deco(fn):
+        # NOT functools.wraps: pytest would follow __wrapped__ and treat the
+        # strategy parameters as fixtures. The wrapper takes no arguments.
+        def wrapper(*outer_args, **outer_kw):
+            rng = random.Random(f"stub:{fn.__module__}.{fn.__qualname__}")
+            # boundary combos (all-min, all-max), then seeded random draws
+            combos = []
+            for pick in (0, 1):
+                combos.append((
+                    [s.examples(rng)[pick] for s in arg_strats],
+                    {k: s.examples(rng)[pick] for k, s in kw_strats.items()}))
+            n_random = getattr(fn, "_stub_max_examples", _RANDOM_EXAMPLES)
+            for _ in range(min(n_random, _RANDOM_EXAMPLES)):
+                combos.append(([s.draw(rng) for s in arg_strats],
+                               {k: s.draw(rng) for k, s in kw_strats.items()}))
+            for args, kw in combos:
+                fn(*outer_args, *args, **{**outer_kw, **kw})
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper._stub_inner = fn
+        wrapper.hypothesis_stub = True
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = None, deadline=None, **_kw):
+    def deco(fn):
+        if max_examples is not None:
+            fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def install() -> None:
+    """Register the stub under the `hypothesis` names in sys.modules."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

@@ -5,3 +5,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 # NOTE: no XLA_FLAGS here — tests and benches must see the single real
 # device; only launch/dryrun.py forces 512 placeholder host devices.
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+# Gate the optional `hypothesis` dependency: this container has no network,
+# so when the real package is absent install a minimal deterministic stub
+# (tests/_hypothesis_stub.py) before any test module imports it.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_stub
+    _hypothesis_stub.install()
