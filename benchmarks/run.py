@@ -31,6 +31,7 @@ MODULES = [
     "fig12_bottleneck",
     "cost_savings",
     "scheduler_gains",
+    "cross_provider",
     "lm_speed_models",
     "roofline",
 ]

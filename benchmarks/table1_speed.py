@@ -1,7 +1,7 @@
 """Table I — training speed (steps/s) per (GPU x model), simplest cluster.
 
 Validates the calibrated per-GPU step-time generator against the paper's
-published means (the generator is the fleet stand-in; DESIGN.md §2).
+published means (the generator is the fleet stand-in; docs/DESIGN.md §2).
 """
 from __future__ import annotations
 

@@ -1,0 +1,106 @@
+"""Docs gate (CI `docs` job; tests/test_docs.py runs the link check).
+
+Two checks over the repo's markdown tree:
+
+1. **Links** — every intra-repo markdown link (`[x](path)`, relative, no
+   scheme) must resolve to an existing file or directory, and every
+   `docs/DESIGN.md §N` / `DESIGN.md §N` section citation in *source
+   docstrings* must point at a section DESIGN.md actually numbers.
+2. **Snippets** (`--exec`) — every ```python block in README.md runs
+   as-is, in order, in one shared namespace — the doctest-style guarantee
+   that the quickstart (`Session.from_arch(...).plan(...)`) works.
+
+Exit nonzero on any failure, listing each one.
+
+    PYTHONPATH=src python scripts/check_docs.py [--exec]
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+from typing import List
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# [text](target) — excluding images; schemes and in-page anchors skipped
+_LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+_SECTION_CITE_RE = re.compile(r"DESIGN\.md\s+§(\d+)")
+
+
+def iter_markdown() -> List[pathlib.Path]:
+    md = sorted(ROOT.glob("*.md")) + sorted((ROOT / "docs").glob("*.md"))
+    return [p for p in md if p.is_file()]
+
+
+def check_links() -> List[str]:
+    errors = []
+    for md in iter_markdown():
+        text = md.read_text(encoding="utf-8")
+        for target in _LINK_RE.findall(text):
+            if "://" in target or target.startswith(("mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def check_section_citations() -> List[str]:
+    design = ROOT / "docs" / "DESIGN.md"
+    if not design.exists():
+        return ["docs/DESIGN.md does not exist"]
+    sections = set(re.findall(r"^##\s+§(\d+)", design.read_text(), re.M))
+    errors = []
+    for src_dir in ("src", "benchmarks", "tests", "scripts", "examples"):
+        for py in sorted((ROOT / src_dir).rglob("*.py")):
+            for n in _SECTION_CITE_RE.findall(py.read_text(encoding="utf-8")):
+                if n not in sections:
+                    errors.append(f"{py.relative_to(ROOT)}: cites "
+                                  f"DESIGN.md §{n}, which does not exist "
+                                  f"(have: {sorted(sections)})")
+    return errors
+
+
+def readme_snippets() -> List[str]:
+    text = (ROOT / "README.md").read_text(encoding="utf-8")
+    return re.findall(r"```python\n(.*?)```", text, re.S)
+
+
+def exec_snippets() -> List[str]:
+    ns: dict = {"__name__": "__readme__"}
+    errors = []
+    for i, snippet in enumerate(readme_snippets()):
+        try:
+            exec(compile(snippet, f"README.md#python-{i}", "exec"), ns)
+        except Exception as e:  # noqa: BLE001 - report and continue
+            errors.append(f"README.md python block {i} failed: "
+                          f"{type(e).__name__}: {e}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--exec", action="store_true", dest="do_exec",
+                    help="also execute README ```python blocks")
+    args = ap.parse_args(argv)
+    errors = check_links() + check_section_citations()
+    if args.do_exec:
+        errors += exec_snippets()
+    for e in errors:
+        print(f"FAIL: {e}", file=sys.stderr)
+    n_md = len(iter_markdown())
+    n_sn = len(readme_snippets())
+    print(f"checked {n_md} markdown files"
+          + (f", executed {n_sn} README snippets" if args.do_exec else "")
+          + f": {len(errors)} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,7 +25,7 @@ def dryrun_section() -> str:
     failed = [r for r in rows if r["status"] == "FAILED"]
     lines = [
         f"Compiled cells: {len(ok)} ok, {len(skipped)} skipped "
-        f"(inapplicable per DESIGN.md §4), {len(failed)} failed.",
+        f"(inapplicable per docs/DESIGN.md §4), {len(failed)} failed.",
         "",
         "| arch | shape | mesh | status | compile s | temp GB/device |",
         "|---|---|---|---|---|---|",

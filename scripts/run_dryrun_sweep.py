@@ -79,7 +79,7 @@ def main():
                         json.dump([{"arch": arch, "shape": shape, "ok": False,
                                     "skipped": True,
                                     "reason": "inapplicable cell "
-                                              "(DESIGN.md §4)"}], f)
+                                              "(docs/DESIGN.md §4)"}], f)
                 print(f"SKIP {arch} {shape}")
                 continue
             futs[ex.submit(run_one, arch, shape, args.mesh,

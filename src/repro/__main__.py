@@ -2,9 +2,9 @@
 
     python -m repro train    --arch qwen3-1.7b --steps 5
     python -m repro serve    --arch mamba2-1.3b --tokens 16
-    python -m repro plan     [--arch ...] --gpu v100 --workers 4
-    python -m repro simulate [--arch ...] --gpu v100 --workers 4
-    python -m repro predict  [--arch ...] --gpu v100 --workers 4
+    python -m repro plan     [--arch ...] --gpu v100 --workers 4 [--provider aws]
+    python -m repro simulate [--arch ...] --gpu v100 --workers 4 [--provider azure]
+    python -m repro predict  [--arch ...] --gpu v100 --workers 4 [--provider gcp]
     python -m repro bench    --only table1_speed,fig2_stability
     python -m repro dryrun   --arch qwen3-1.7b --shape train_4k
 
@@ -44,9 +44,9 @@ def build_parser() -> argparse.ArgumentParser:
         cli.add_fleet_args(q)
         q.add_argument("--steps", type=int, default=2000)
         q.add_argument("--checkpoint-interval", type=int, default=200)
-        if name == "plan":
-            # the planner's whole point is comparing regions: default to all
-            q.set_defaults(region=None)
+        # --region defaults to None: `plan` scores every region of the
+        # selected provider; simulate/predict fall back to the provider's
+        # default region
 
     b = sub.add_parser("bench", help="paper table/figure benchmark driver")
     b.add_argument("--only", default="",
@@ -102,9 +102,11 @@ def _cmd_plan(args) -> int:
     best, plans = session.plan(gpu=args.gpu, n_workers=args.workers,
                                steps=args.steps,
                                checkpoint_interval=args.checkpoint_interval,
-                               region=args.region, seed=args.seed)
+                               region=args.region, seed=args.seed,
+                               provider=args.provider)
     where = args.region or "all regions"
-    print(f"arch={session.arch} gpu={args.gpu} workers={args.workers} "
+    print(f"arch={session.arch} provider={args.provider} gpu={args.gpu} "
+          f"workers={args.workers} "
           f"({where}): scored {len(plans)} (region, hour) cells")
     print(f"best: {best.region} @ {best.launch_hour:02d}h  "
           f"E[revocations]={best.expected_revocations:.2f}  "
@@ -118,8 +120,10 @@ def _cmd_simulate(args) -> int:
     res = session.simulate(n_workers=args.workers, gpu=args.gpu,
                            region=args.region, steps=args.steps,
                            checkpoint_interval=args.checkpoint_interval,
-                           n_ps=args.n_ps, seed=args.seed)
-    print(f"arch={session.arch} {args.workers}x{args.gpu} in {args.region}: "
+                           n_ps=args.n_ps, seed=args.seed,
+                           provider=args.provider)
+    print(f"arch={session.arch} {args.workers}x{args.gpu} on "
+          f"{res.provider}/{res.region}: "
           f"{res.steps_done} steps in {res.total_time_s:.0f}s  "
           f"revocations={res.revocations} replacements={res.replacements} "
           f"ckpt={res.checkpoint_time_s:.0f}s cost=${res.monetary_cost:.2f}")
@@ -131,8 +135,10 @@ def _cmd_predict(args) -> int:
     rep = session.predict(n_workers=args.workers, gpu=args.gpu,
                           region=args.region, steps=args.steps,
                           checkpoint_interval=args.checkpoint_interval,
-                          n_ps=args.n_ps, seed=args.seed)
-    print(f"arch={rep.arch} {rep.n_workers}x{rep.gpu} in {rep.region}: "
+                          n_ps=args.n_ps, seed=args.seed,
+                          provider=args.provider)
+    print(f"arch={rep.arch} {rep.n_workers}x{rep.gpu} on "
+          f"{rep.provider}/{rep.region}: "
           f"worker {rep.worker_speed:.2f} steps/s, cluster "
           f"{rep.cluster_speed:.2f} steps/s"
           f"{' (PS-bottlenecked)' if rep.ps_bottlenecked else ''}")
@@ -176,8 +182,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     try:
         return _HANDLERS[args.cmd](args)
     except ValueError as e:
-        # domain validation (e.g. a (region, gpu) pair the paper's fleet
-        # never offered) — report cleanly, not as a traceback
+        # domain validation (e.g. a (region, gpu) cell the selected
+        # provider never sold) — report cleanly, not as a traceback.
+        # Unknown provider/arch never reach here: argparse `choices`
+        # rejects them first, and internal KeyErrors stay loud.
         print(f"error: {e}", file=sys.stderr)
         return 2
 

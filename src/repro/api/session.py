@@ -11,6 +11,10 @@ stop hand-wiring configs -> models -> trainer -> perf models -> fleet sim:
     rep = s.train(steps=50)                         # elastic trainer + bus
     out = s.serve(tokens=16)                        # prefill/decode loop
 
+plan/simulate/predict take `provider="gcp"|"aws"|"azure"` (docs/providers.md)
+to run the same models over a different transient market; the default is the
+paper's GCP preemptible fleet.
+
 All run-shaped knobs default from the Session's `RunConfig`; every method
 takes overrides. Training wires the profiler + bottleneck Controller through
 the Session's `EventBus` (`session.bus.subscribe("step", fn)` etc.).
@@ -29,16 +33,15 @@ from repro.core.perf_model.cluster_model import (Eq4Inputs, PSBottleneckModel,
                                                  WorkerSpec, cluster_speed,
                                                  expected_revocations,
                                                  predict_total_time)
-from repro.core.perf_model.features import GPU_SPECS
 from repro.core.perf_model.speed_model import calibrate_generators
 from repro.core.scheduler import LaunchPlan, plan_launch
 from repro.core.trainer import MembershipEvent, TrainReport, TransientTrainer
 from repro.core.transient.fleet import FleetSim, SimResult, SimWorker
 from repro.core.transient.replacement import ReplacementModel
-from repro.core.transient.revocation import REGION_GPU_PARAMS
 from repro.core.transient.startup import StartupModel
 from repro.data.pipeline import ShardedLoader, source_for_config
 from repro.dist.elastic import Member
+from repro.providers import FleetProvider, get_provider
 
 # Sequential-checkpoint write bandwidth assumed when no measurement is
 # available yet (§IV: T_c scales ~linearly with checkpoint size).
@@ -52,6 +55,7 @@ class PredictionReport:
     arch: str
     gpu: str
     region: str
+    provider: str
     n_workers: int
     model_gflops: float
     model_bytes: float
@@ -69,11 +73,15 @@ class Session:
     """One model + run configuration, and every CM-DARE capability on it."""
 
     def __init__(self, cfg: ModelConfig, run: Optional[RunConfig] = None,
-                 *, arch: Optional[str] = None, bus: Optional[EventBus] = None):
+                 *, arch: Optional[str] = None, bus: Optional[EventBus] = None,
+                 provider: object = "gcp"):
         self.cfg = cfg
         self.run = run or RunConfig()
         self.arch = arch or cfg.name
         self.bus = bus or EventBus()
+        # session-default transient market; plan/simulate/predict take a
+        # per-call `provider=` override (name or FleetProvider instance)
+        self.provider: FleetProvider = get_provider(provider)
         self.trainer: Optional[TransientTrainer] = None
         self.last_report: Optional[TrainReport] = None
         self._last_state = None     # final TrainState of the last train()
@@ -84,17 +92,20 @@ class Session:
     def from_arch(cls, arch: str, *, smoke: bool = True,
                   run: Optional[RunConfig] = None,
                   bus: Optional[EventBus] = None,
+                  provider: object = "gcp",
                   **run_overrides) -> "Session":
         """Resolve a registered architecture id (see `repro.configs`).
 
-        `run_overrides` are `RunConfig` fields (lr, total_steps, ...).
+        `run_overrides` are `RunConfig` fields (lr, total_steps, ...);
+        `provider` sets the session's default transient market.
         """
         if arch not in ARCH_IDS:
             raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCH_IDS)}")
         run = run or RunConfig()
         if run_overrides:
             run = dataclasses.replace(run, **run_overrides)
-        return cls(get_config(arch, smoke=smoke), run, arch=arch, bus=bus)
+        return cls(get_config(arch, smoke=smoke), run, arch=arch, bus=bus,
+                   provider=provider)
 
     # ---------------------------------------------------------- model meta
     def describe(self) -> Dict[str, object]:
@@ -123,23 +134,33 @@ class Session:
             self._gens = calibrate_generators()
         return self._gens
 
-    def _check_fleet(self, gpu: str, region: Optional[str] = None) -> None:
-        """The paper's fleet models only cover the measured GPUs and the
-        (region, gpu) offerings of Table V — fail with the options."""
+    def _provider(self, provider: Optional[object]) -> FleetProvider:
+        """Resolve a per-call override against the session default."""
+        return self.provider if provider is None else get_provider(provider)
+
+    def _check_fleet(self, gpu: str, region: Optional[str] = None,
+                     provider: Optional[FleetProvider] = None) -> None:
+        """The speed models only cover the measured GPUs, and each provider
+        only sells certain (region, gpu) cells — fail with the options."""
         gens = self._generators()
         if gpu not in gens:
             raise ValueError(f"no calibrated speed model for {gpu!r}; "
                              f"available: {sorted(gens)}")
-        if region is not None and (region, gpu) not in REGION_GPU_PARAMS:
-            offered = sorted(r for r, g in REGION_GPU_PARAMS if g == gpu)
-            raise ValueError(f"({region!r}, {gpu!r}) is not offered in the "
-                             f"paper's fleet; regions with {gpu}: {offered}")
+        prov = provider or self.provider
+        if region is None:
+            prov.check_gpu_offered(gpu)
+        else:
+            prov.check_offered(region, gpu)
 
     def predict_worker_speed(self, gpu: str = "v100",
                              seq_len: Optional[int] = None,
-                             per_worker_batch: int = 8) -> float:
-        """Solo steps/s on `gpu` from the calibrated §III step-time model."""
-        self._check_fleet(gpu)
+                             per_worker_batch: int = 8,
+                             provider: Optional[object] = None) -> float:
+        """Solo steps/s on `gpu` from the calibrated §III step-time model.
+
+        The speed model is hardware-only; `provider` only scopes the
+        does-this-market-sell-this-GPU validation."""
+        self._check_fleet(gpu, provider=self._provider(provider))
         c_m = self.model_gflops(seq_len, per_worker_batch)
         return 1.0 / self._generators()[gpu].step_time(c_m)
 
@@ -156,21 +177,30 @@ class Session:
              t_c: Optional[float] = None,
              hours: Optional[List[int]] = None,
              region: Optional[str] = None,
-             seed: int = 0) -> Tuple[LaunchPlan, List[LaunchPlan]]:
+             seed: int = 0,
+             provider: Optional[object] = None
+             ) -> Tuple[LaunchPlan, List[LaunchPlan]]:
         """Revocation-aware (region, launch-hour) planning for this model.
 
         `region=None` scores every region offering `gpu`; pass a region to
-        constrain the plan to it.
+        constrain the plan to it. `provider` picks the transient market
+        (default: the session's, normally "gcp").
         """
+        prov = self._provider(provider)
+        # validate (gpu, region) BEFORE the MC sweep so a typo'd region
+        # fails immediately instead of after seconds of discarded work
+        self._check_fleet(gpu, region, prov)
         best, plans = plan_launch(
-            gpu, n_workers, self.predict_worker_speed(gpu),
+            gpu, n_workers, self.predict_worker_speed(gpu, provider=prov),
             n_w=self.run.total_steps if steps is None else steps,
             i_c=(self.run.checkpoint_interval if checkpoint_interval is None
                  else checkpoint_interval),
             t_c=t_c if t_c is not None else self.checkpoint_seconds(),
-            hours=hours, seed=seed)
+            hours=hours, seed=seed, provider=prov,
+            # the session's real model complexity, so plan() and predict()
+            # agree on the Fig 10 replacement term for the same cell
+            model_gflops=self.model_gflops())
         if region is not None:
-            self._check_fleet(gpu, region)
             plans = [p for p in plans if p.region == region]
             best = min(plans, key=lambda p: (p.expected_cost,
                                              p.expected_time_s))
@@ -178,21 +208,27 @@ class Session:
 
     # ------------------------------------------------- §VI-A fleet sim
     def simulate(self, n_workers: int = 4, gpu: str = "v100",
-                 region: str = "us-central1",
+                 region: Optional[str] = None,
                  counts: Optional[Dict[str, int]] = None,
                  steps: Optional[int] = None,
                  checkpoint_interval: Optional[int] = None,
                  n_ps: int = 1, seed: int = 0, replace: bool = True,
                  handover: bool = True,
-                 max_hours: float = 48.0) -> SimResult:
+                 max_hours: float = 48.0,
+                 provider: Optional[object] = None,
+                 start_hour: float = 0.0) -> SimResult:
         """Discrete-event simulation of one run on a transient cluster.
 
         Either a homogeneous (`n_workers` x `gpu`) cluster or an explicit
-        heterogeneous `counts` mapping gpu -> count.
+        heterogeneous `counts` mapping gpu -> count. `provider` picks the
+        transient market; `region=None` uses that market's default region;
+        `start_hour` is the local launch hour (diurnal lifetime laws).
         """
+        prov = self._provider(provider)
+        region = region or prov.default_region
         counts = counts or {gpu: n_workers}
         for g in counts:
-            self._check_fleet(g, region)
+            self._check_fleet(g, region, prov)
         n_steps = self.run.total_steps if steps is None else steps
         i_c = (self.run.checkpoint_interval if checkpoint_interval is None
                else checkpoint_interval)
@@ -212,38 +248,44 @@ class Session:
             step_speed_of=lambda g: 1.0 / gens[g].step_time(c_m),
             checkpoint_interval_steps=i_c, checkpoint_time_s=t_c, n_ps=n_ps,
             seed=seed, replace=replace, handover=handover,
-            price_of={g: GPU_SPECS[g].transient_price for g in counts})
-        return sim.run(n_steps, max_hours=max_hours)
+            price_of={g: prov.price(g) for g in counts}, provider=prov)
+        return sim.run(n_steps, max_hours=max_hours, start_hour=start_hour)
 
     # ------------------------------------------------ Eq (4)/(5) predict
     def predict(self, n_workers: int = 4, gpu: str = "v100",
-                region: str = "us-central1",
+                region: Optional[str] = None,
                 steps: Optional[int] = None,
                 checkpoint_interval: Optional[int] = None,
                 n_ps: int = 1, t_c: Optional[float] = None,
-                seed: int = 0) -> PredictionReport:
+                seed: int = 0,
+                provider: Optional[object] = None) -> PredictionReport:
         """Compose the §III speed, §IV checkpoint and §V revocation models
-        into the Eq (4) end-to-end wall-clock prediction."""
-        self._check_fleet(gpu, region)
+        into the Eq (4) end-to-end wall-clock prediction. `provider` picks
+        the transient market; `region=None` uses its default region."""
+        prov = self._provider(provider)
+        region = region or prov.default_region
+        self._check_fleet(gpu, region, prov)
         n_w = self.run.total_steps if steps is None else steps
         i_c = (self.run.checkpoint_interval if checkpoint_interval is None
                else checkpoint_interval)
-        worker_speed = self.predict_worker_speed(gpu)
+        worker_speed = self.predict_worker_speed(gpu, provider=prov)
         ps = PSBottleneckModel(self.model_bytes(), n_ps)
         workers = [WorkerSpec(gpu, worker_speed)] * n_workers
         sp = cluster_speed(workers, ps)
         hours = n_w / sp / 3600.0
-        lifetime = REGION_GPU_PARAMS[(region, gpu)]
-        probs = [lifetime.prob_revoked_within(min(hours, 24.0))] * n_workers
+        lifetime = prov.lifetime_model(region, gpu)
+        horizon = min(hours, prov.max_lifetime_hours)
+        probs = [lifetime.prob_revoked_within(horizon)] * n_workers
         t_c = t_c if t_c is not None else self.checkpoint_seconds()
         if i_c == 0:  # no checkpointing: zero pauses, Eq (4) stays defined
             i_c, t_c = n_w, 0.0
-        t_p = StartupModel(seed).mean_total(gpu)
-        t_s = ReplacementModel(seed).cold_start_s(self.model_gflops())
+        t_p = StartupModel(seed, prov).mean_total(gpu)
+        t_s = ReplacementModel(seed, prov).cold_start_s(self.model_gflops())
         total = predict_total_time(sp, Eq4Inputs(n_w, i_c, t_c, t_p, t_s,
                                                  probs))
         return PredictionReport(
-            arch=self.arch, gpu=gpu, region=region, n_workers=n_workers,
+            arch=self.arch, gpu=gpu, region=region, provider=prov.name,
+            n_workers=n_workers,
             model_gflops=self.model_gflops(),
             model_bytes=self.model_bytes(), worker_speed=worker_speed,
             cluster_speed=sp, ps_bottlenecked=ps.is_bottlenecked(workers),

@@ -201,7 +201,7 @@ SHAPES = {s.name: s for s in ALL_SHAPES}
 def valid_cells(cfg: ModelConfig):
     """The (arch x shape) cells that are runnable for this architecture.
 
-    Skips (recorded, per DESIGN.md): decode shapes for encoder-only archs;
+    Skips (recorded, per docs/DESIGN.md §4): decode shapes for encoder-only archs;
     long_500k for pure full-attention archs (needs sub-quadratic attention).
     """
     out = []

@@ -2,7 +2,7 @@
 GPU computational capacity C_gpu (peak TFLOPs), computation ratio
 C_norm = C_m / C_gpu, min-max normalized.
 
-TPU adaptation (DESIGN.md §2): the same features work for TPU slice
+TPU adaptation (docs/DESIGN.md §2): the same features work for TPU slice
 generations — C_gpu becomes per-chip peak bf16 FLOP/s, and C_m comes from the
 dry-run's compiled HLO FLOPs instead of a TF profiler.
 """

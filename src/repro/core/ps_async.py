@@ -14,7 +14,7 @@ Two layers:
    the paper's premise that async training tolerates heterogeneous worker
    paces (slow workers don't block fast ones).
 
-TPU adaptation note (DESIGN.md §2): the production runtime is synchronous
+TPU adaptation note (docs/DESIGN.md §2): the production runtime is synchronous
 SPMD (core/trainer.py); this module exists to reproduce the paper's
 measurement semantics faithfully.
 """

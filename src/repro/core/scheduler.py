@@ -8,6 +8,11 @@ launch-hour) offering that GPU: Monte-Carlo the diurnal-aware lifetime model
 for E[revocations] during the run, push that through Eq (4) for expected
 wall-clock, and price the result (transient rates + replacement overheads).
 Returns the Pareto plan (min expected cost, tie-broken by time).
+
+`provider=` selects the market being planned over (DESIGN.md §5): regions,
+lifetime laws, startup/replacement overheads and prices all come from the
+`repro.providers` adapter, so the same planner compares GCP preemptible,
+AWS spot and Azure low-priority offerings.
 """
 from __future__ import annotations
 
@@ -20,10 +25,8 @@ import numpy as np
 from repro.core.perf_model.cluster_model import (Eq4Inputs, WorkerSpec,
                                                  cluster_speed,
                                                  predict_total_time)
-from repro.core.perf_model.features import GPU_SPECS
 from repro.core.transient.replacement import ReplacementModel
-from repro.core.transient.revocation import (REGION_GPU_PARAMS,
-                                             RevocationSampler)
+from repro.core.transient.revocation import RevocationSampler
 from repro.core.transient.startup import StartupModel
 
 
@@ -36,19 +39,17 @@ class LaunchPlan:
     expected_revocations: float
     expected_time_s: float
     expected_cost: float
-
-
-def _regions_offering(gpu: str) -> List[str]:
-    return sorted({r for (r, g) in REGION_GPU_PARAMS if g == gpu})
+    provider: str = "gcp"
 
 
 def expected_revocations_mc(region: str, gpu: str, start_hour: float,
                             run_hours: float, n_workers: int,
-                            samples: int = 200, seed: int = 0) -> float:
+                            samples: int = 200, seed: int = 0,
+                            provider: object = "gcp") -> float:
     """Diurnal-aware E[revocations]: MC over the lifetime sampler (the CDF
     alone is launch-hour-agnostic)."""
-    samp = RevocationSampler(seed)
-    horizon = min(run_hours, 24.0)
+    samp = RevocationSampler(seed, provider)
+    horizon = min(run_hours, samp.provider.max_lifetime_hours)
     hits = 0
     for s in range(samples):
         lt = samp.lifetime(region, gpu, start_hour=start_hour)
@@ -60,32 +61,42 @@ def expected_revocations_mc(region: str, gpu: str, start_hour: float,
 def plan_launch(gpu: str, n_workers: int, worker_speed: float,
                 n_w: int, i_c: int, t_c: float,
                 hours: Optional[List[int]] = None,
-                seed: int = 0) -> Tuple[LaunchPlan, List[LaunchPlan]]:
-    """Scores all (region, hour) cells; returns (best, all).
+                seed: int = 0,
+                provider: object = "gcp",
+                model_gflops: float = 1.54) -> Tuple[LaunchPlan,
+                                                     List[LaunchPlan]]:
+    """Scores all (region, hour) cells of one provider; returns (best, all).
 
     worker_speed: steps/s per worker for the target model (from the §III
-    predictors). Costing: transient hourly price x workers x expected time,
-    replacement overhead included via Eq (4).
+    predictors); model_gflops: its complexity C_m, which sets the Fig 10
+    replacement cold-start (default: the paper's ResNet-32). Costing:
+    transient hourly price x workers x expected time, replacement overhead
+    included via Eq (4).
     """
+    from repro.providers import get_provider
+    prov = get_provider(provider)
+    prov.check_gpu_offered(gpu)
     hours = hours if hours is not None else list(range(0, 24, 3))
-    spec = GPU_SPECS[gpu]
-    startup = StartupModel(seed)
-    repl = ReplacementModel(seed)
+    startup = StartupModel(seed, prov)
+    repl = ReplacementModel(seed, prov)
+    price = prov.price(gpu)
     sp = cluster_speed([WorkerSpec(gpu, worker_speed)] * n_workers)
     base_hours = n_w / sp / 3600.0
     t_p = startup.mean_total(gpu)
-    t_s = repl.cold_start_s(1.54)  # ResNet-32-complexity default
+    t_s = repl.cold_start_s(model_gflops)
     plans: List[LaunchPlan] = []
-    for region in _regions_offering(gpu):
+    for region in prov.regions_offering(gpu):
         for h in hours:
             n_r = expected_revocations_mc(region, gpu, float(h), base_hours,
-                                          n_workers, seed=seed)
+                                          n_workers, seed=seed,
+                                          provider=prov)
             # spread Pr over workers equally for Eq (5)
             probs = [n_r / n_workers] * n_workers
             t = predict_total_time(sp, Eq4Inputs(n_w, i_c, t_c, t_p, t_s,
                                                  probs))
-            cost = (t / 3600.0) * n_workers * spec.transient_price \
-                + n_r * (t_p / 3600.0) * spec.transient_price
-            plans.append(LaunchPlan(region, gpu, h, n_workers, n_r, t, cost))
+            cost = (t / 3600.0) * n_workers * price \
+                + n_r * (t_p / 3600.0) * price
+            plans.append(LaunchPlan(region, gpu, h, n_workers, n_r, t, cost,
+                                    prov.name))
     best = min(plans, key=lambda p: (p.expected_cost, p.expected_time_s))
     return best, plans

@@ -1,5 +1,5 @@
 """Discrete-event transient-fleet simulator — the stand-in for the paper's
-cloud measurement fleet (DESIGN.md §2). Drives training-loop simulations:
+cloud measurement fleet (docs/DESIGN.md §2). Drives training-loop simulations:
 revocations (per region/GPU/time-of-day), replacement startup, PS bottleneck,
 checkpoint overhead — everything Eq (4) predicts, so predicted-vs-simulated
 error is a meaningful §VI-A validation.
@@ -48,6 +48,8 @@ class SimResult:
     lost_steps: float
     events: List[Tuple[float, str]]
     monetary_cost: float
+    provider: str = "gcp"
+    region: str = ""
 
 
 class FleetSim:
@@ -55,13 +57,20 @@ class FleetSim:
 
     Policies: `replace` (request a new transient server on revocation),
     `handover` (CM-DARE checkpoint-lease handover vs stock chief-IP restart).
+    `provider` selects the market (revocation/startup/replacement laws from
+    `repro.providers`); with a provider whose revocation notice is long
+    enough to flush a checkpoint (`graceful_checkpoint_on_warning` and
+    `warning_seconds >= T_c`, e.g. AWS's 2-minute notice), a revoked chief
+    checkpoints before dying, so stock identity-reuse loses no steps.
     """
 
     def __init__(self, workers: List[SimWorker], *, model_gflops: float,
                  model_bytes: float, step_speed_of: Callable[[str], float],
                  checkpoint_interval_steps: int, checkpoint_time_s: float,
                  n_ps: int = 1, seed: int = 0, replace: bool = True,
-                 handover: bool = True, price_of: Optional[Dict] = None):
+                 handover: bool = True, price_of: Optional[Dict] = None,
+                 provider: object = "gcp"):
+        from repro.providers import get_provider
         self.workers = {w.wid: w for w in workers}
         if workers:
             workers[0].is_chief = True
@@ -73,9 +82,10 @@ class FleetSim:
         self.n_ps = n_ps
         self.replace = replace
         self.handover = handover
-        self.rev = RevocationSampler(seed)
-        self.startup = StartupModel(seed + 1)
-        self.repl = ReplacementModel(seed + 2)
+        self.provider = get_provider(provider)
+        self.rev = RevocationSampler(seed, self.provider)
+        self.startup = StartupModel(seed + 1, self.provider)
+        self.repl = ReplacementModel(seed + 2, self.provider)
         self.rng = np.random.default_rng(seed + 3)
         self.price_of = price_of or {}
 
@@ -87,12 +97,15 @@ class FleetSim:
         ps = PSBottleneckModel(self.model_bytes, self.n_ps)
         return cluster_speed(alive, ps)
 
-    def run(self, total_steps: int, max_hours: float = 48.0) -> SimResult:
+    def run(self, total_steps: int, max_hours: float = 48.0,
+            start_hour: float = 0.0) -> SimResult:
+        """`start_hour`: local launch hour, so diurnal lifetime laws (GCP
+        Fig 9, AWS price signal) see the planned launch cell."""
         q: List[FleetEvent] = []
         next_wid = max(self.workers) + 1
         # schedule revocations
         for w in self.workers.values():
-            lt = self.rev.lifetime(w.region, w.gpu)
+            lt = self.rev.lifetime(w.region, w.gpu, start_hour=start_hour)
             if math.isfinite(lt):
                 heapq.heappush(q, FleetEvent(lt * 3600.0, "revoke",
                                              {"wid": w.wid}))
@@ -166,6 +179,17 @@ class FleetSim:
                                     o.is_chief = True
                                     break
                             events.append((t, "chief handover (no recompute)"))
+                        elif (self.provider.graceful_checkpoint_on_warning
+                                and self.provider.warning_seconds >= self.t_c):
+                            # the market's revocation notice is long enough
+                            # for the chief to flush a checkpoint before
+                            # dying: nothing to recompute even without
+                            # lease handover. The write overlaps the notice
+                            # window (wall-clock already counted), so it
+                            # does NOT accrue checkpoint pause time.
+                            last_ckpt_step = int(round(steps))
+                            events.append(
+                                (t, "warning checkpoint (no recompute)"))
                         else:
                             # stock behavior: recompute from last checkpoint
                             lost_now = steps - last_ckpt_step
@@ -179,19 +203,25 @@ class FleetSim:
                         su = self.startup.sample(w.gpu, after_revocation=True)
                         cold = self.repl.sample(self.model_gflops, cold=True)
                         ready = t + su["total"] + cold
+                        # stock mode (Fig 11): the replacement inherits the
+                        # revoked chief's identity, so later chief
+                        # revocations keep costing recompute; with handover
+                        # a survivor was already promoted above
                         heapq.heappush(q, FleetEvent(
                             ready, "join",
                             {"gpu": w.gpu, "region": w.region,
-                             "speed": w.speed}))
+                             "speed": w.speed,
+                             "chief": w.is_chief and not self.handover}))
                 elif ev.kind == "join":
                     w = SimWorker(next_wid, ev.payload["gpu"],
-                                  ev.payload["region"], ev.payload["speed"])
+                                  ev.payload["region"], ev.payload["speed"],
+                                  is_chief=ev.payload.get("chief", False))
                     next_wid += 1
                     self.workers[w.wid] = w
                     replacements += 1
                     events.append((t, f"join w{w.wid} ({w.gpu})"))
                     lt = self.rev.lifetime(w.region, w.gpu,
-                                           start_hour=t / 3600.0)
+                                           start_hour=start_hour + t / 3600.0)
                     if math.isfinite(lt):
                         heapq.heappush(q, FleetEvent(
                             t + lt * 3600.0, "revoke", {"wid": w.wid}))
@@ -200,5 +230,12 @@ class FleetSim:
 
         cost = sum(secs / 3600.0 * self.price_of.get(g, 0.0)
                    for g, secs in gpu_seconds.items())
+        regions = {w.region for w in self.workers.values()}
         return SimResult(t, int(steps), revocations, replacements, ckpt_time,
-                         recompute, lost, events, cost)
+                         recompute, lost, events, cost,
+                         provider=self.provider.name,
+                         region=regions.pop() if len(regions) == 1 else "")
+
+
+#: Long-form alias used by the docs and the provider layer.
+FleetSimulator = FleetSim

@@ -22,16 +22,21 @@ _COMPLEXITY_SLOPE = 0.72   # s per GFLOP of model complexity (graph setup)
 
 @dataclasses.dataclass
 class ReplacementModel:
+    """Rejoin-time sampler; `provider` selects whose cold/warm anchors are
+    used (the default is the paper's Fig 10 GCP calibration)."""
     seed: int = 0
+    provider: object = "gcp"
 
     def __post_init__(self):
+        from repro.providers import get_provider
         self.rng = np.random.default_rng(self.seed)
+        self._anchors = get_provider(self.provider).replacement_anchors()
 
     def cold_start_s(self, c_m_gflops: float) -> float:
-        return _COLD_BASE + _COMPLEXITY_SLOPE * c_m_gflops
+        return self._anchors.cold_start_s(c_m_gflops)
 
     def warm_start_s(self, c_m_gflops: float) -> float:
-        return _WARM_BASE + 0.5 * _COMPLEXITY_SLOPE * c_m_gflops
+        return self._anchors.warm_start_s(c_m_gflops)
 
     def sample(self, c_m_gflops: float, cold: bool = True) -> float:
         mean = (self.cold_start_s if cold else self.warm_start_s)(c_m_gflops)

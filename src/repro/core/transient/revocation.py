@@ -134,16 +134,25 @@ REGION_GPU_PARAMS = {key: LifetimeModel.calibrated(*key)
 
 @dataclasses.dataclass
 class RevocationSampler:
-    """Fleet-level sampler used by the simulator and Eq (5)."""
+    """Fleet-level sampler used by the simulator and Eq (5).
+
+    `provider` selects the market whose lifetime laws are sampled (a
+    `repro.providers` registry name or instance); the default reproduces
+    the paper's GCP fleet bit-for-bit.
+    """
     seed: int = 0
+    provider: object = "gcp"
 
     def __post_init__(self):
+        from repro.providers import get_provider
         self.rng = np.random.default_rng(self.seed)
+        self.provider = get_provider(self.provider)
 
     def lifetime(self, region: str, gpu: str, start_hour: float = 0.0) -> float:
-        m = REGION_GPU_PARAMS[(region, gpu)]
+        m = self.provider.lifetime_model(region, gpu)
         return float(m.sample(self.rng, 1, start_hour)[0])
 
     def prob_revoked_within(self, region: str, gpu: str,
                             t_hours: float) -> float:
-        return REGION_GPU_PARAMS[(region, gpu)].prob_revoked_within(t_hours)
+        m = self.provider.lifetime_model(region, gpu)
+        return m.prob_revoked_within(t_hours)

@@ -26,17 +26,18 @@ _POST_REVOCATION_COV = 0.12        # 4x higher CoV right after a revocation
 
 @dataclasses.dataclass
 class StartupModel:
+    """Per-stage startup sampler; `provider` selects whose stage-mean table
+    is used (the default is the paper's GCP calibration, bit-for-bit)."""
     seed: int = 0
+    provider: object = "gcp"
 
     def __post_init__(self):
+        from repro.providers import get_provider
         self.rng = np.random.default_rng(self.seed)
+        self.provider = get_provider(self.provider)
 
     def stage_means(self, gpu: str, transient: bool = True):
-        p, s, r = _STAGE_MEANS[gpu]
-        if not transient:
-            cut = _ONDEMAND_DISCOUNT[gpu]
-            s = max(5.0, s - cut)
-        return p, s, r
+        return self.provider.startup_stages(gpu).means(transient)
 
     def mean_total(self, gpu: str, transient: bool = True) -> float:
         return float(sum(self.stage_means(gpu, transient)))

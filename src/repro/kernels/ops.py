@@ -4,7 +4,7 @@ On non-TPU backends (this container) kernels run in interpret mode — the
 kernel body executes in Python on CPU, validating the exact TPU program logic.
 Backward passes: flash attention has a full Pallas bwd; ssd/rmsnorm use
 custom_vjp with an XLA bwd over the ref (kernel accelerates fwd, bwd is
-recompute — documented in DESIGN.md).
+recompute — documented in docs/DESIGN.md §1, kernels layer).
 """
 from __future__ import annotations
 

@@ -64,10 +64,18 @@ def add_serve_args(p: argparse.ArgumentParser) -> None:
 
 def add_fleet_args(p: argparse.ArgumentParser,
                    workers_default: int = 4) -> None:
+    from repro.providers import available_providers
+
     # only the paper's measured GPUs have calibrated speed/revocation
     # models (v5e is the TPU serving/training chip, not a fleet offering)
     p.add_argument("--gpu", default="v100", choices=("k80", "p100", "v100"))
-    p.add_argument("--region", default="us-central1")
+    p.add_argument("--provider", default="gcp",
+                   choices=available_providers(),
+                   help="transient market to plan/simulate/predict on "
+                        "(docs/providers.md)")
+    p.add_argument("--region", default=None,
+                   help="constrain to one region (default: the provider's "
+                        "default region; `plan` scores all regions)")
     p.add_argument("--workers", type=int, default=workers_default)
     p.add_argument("--n-ps", type=int, default=1)
 

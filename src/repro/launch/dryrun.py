@@ -345,7 +345,7 @@ def main(argv=None) -> None:
     if SHAPES[args.shape] not in valid_cells(cfg):
         rec = {"arch": args.arch, "shape": args.shape, "ok": False,
                "skipped": True,
-               "reason": "cell skipped per DESIGN.md §Arch-applicability"}
+               "reason": "cell skipped per DESIGN.md §4 (arch-applicability)"}
         print(json.dumps(rec))
         if args.out:
             with open(args.out, "w") as f:

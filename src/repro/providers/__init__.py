@@ -1,0 +1,25 @@
+"""Multi-cloud `FleetProvider` layer (docs/providers.md, DESIGN.md §5).
+
+One interface owns everything that differs between transient-GPU markets
+— the (region, gpu) offering grid, revocation-lifetime laws, startup and
+replacement-time models, and hourly pricing — so the paper's Eq (4)/(5)
+machinery plans, simulates and predicts on any of them:
+
+    from repro.providers import get_provider
+    aws = get_provider("aws")
+    aws.lifetime_model("us-east-1", "v100").prob_revoked_within(12.0)
+
+Built-in adapters: `gcp` (the paper's Table V / Fig 8-9 calibrations,
+bit-for-bit), `aws` (uncapped price-signal hazard, 2-min notice), `azure`
+(eviction-rate tiers, 30 s notice). `provider=` parameters across
+`repro.core.transient`, `repro.core.scheduler` and `repro.api.Session`
+accept either a registry name or a `FleetProvider` instance.
+"""
+from repro.providers.base import (FleetProvider, LifetimeLaw,  # noqa: F401
+                                  Offering, ReplacementAnchors,
+                                  StartupStages)
+from repro.providers.registry import (available_providers,  # noqa: F401
+                                      get_provider, register_provider)
+from repro.providers.gcp import GCP, GCPPreemptible  # noqa: F401
+from repro.providers.aws import AWS, AWSSpot  # noqa: F401
+from repro.providers.azure import AZURE, AzureLowPriority  # noqa: F401

@@ -1,6 +1,6 @@
 """The long_500k cell rationale, as executable facts: SSM decode state is
 O(1) in context length, attention KV cache is O(L) — why mamba2/zamba2 run
-the 500k cell and pure-attention archs skip it (DESIGN.md §4)."""
+the 500k cell and pure-attention archs skip it (docs/DESIGN.md §4)."""
 import jax
 import jax.numpy as jnp
 import pytest

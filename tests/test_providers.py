@@ -1,0 +1,247 @@
+"""Provider-layer tests: registry behavior, GCP adapter parity with the
+pre-provider hard-wired constants (golden values), AWS/Azure market
+semantics, and cross-provider Session smoke coverage."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.api import Session
+from repro.core.perf_model.features import GPU_SPECS
+from repro.core.scheduler import plan_launch
+from repro.core.transient.replacement import ReplacementModel
+from repro.core.transient.revocation import (REGION_GPU_PARAMS, TABLE5_RATES,
+                                             RevocationSampler)
+from repro.core.transient.startup import StartupModel
+from repro.providers import (FleetProvider, LifetimeLaw, Offering,
+                             available_providers, get_provider)
+
+
+# ---------------------------------------------------------------- registry
+def test_registry_has_builtins_and_resolves():
+    assert available_providers() == ["aws", "azure", "gcp"]
+    gcp = get_provider("gcp")
+    assert isinstance(gcp, FleetProvider)
+    # instance passthrough: provider= params accept either form
+    assert get_provider(gcp) is gcp
+
+
+def test_registry_unknown_provider_names_alternatives():
+    with pytest.raises(KeyError, match=r"aws.*azure.*gcp"):
+        get_provider("digitalocean")
+
+
+def test_unoffered_cell_error_names_alternatives():
+    with pytest.raises(ValueError, match="does not offer"):
+        get_provider("aws").lifetime_model("us-east-1", "p100")
+    with pytest.raises(ValueError, match="regions with v100"):
+        get_provider("gcp").lifetime_model("europe-west1", "v100")
+
+
+# --------------------------------------------------------- GCP parity
+def test_gcp_offerings_match_table5():
+    gcp = get_provider("gcp")
+    assert set(gcp.offerings()) == {
+        Offering(r, g) for (r, g), rate in TABLE5_RATES.items()
+        if rate is not None}
+    assert gcp.max_lifetime_hours == 24.0
+    assert not gcp.graceful_checkpoint_on_warning
+
+
+def test_gcp_lifetime_model_is_the_calibrated_object():
+    gcp = get_provider("gcp")
+    m = gcp.lifetime_model("us-central1", "v100")
+    assert m is REGION_GPU_PARAMS[("us-central1", "v100")]
+    assert isinstance(m, LifetimeLaw)  # virtual subclass registration
+    assert m.prob_revoked_within(24.0) == pytest.approx(
+        TABLE5_RATES[("us-central1", "v100")])
+
+
+def test_gcp_prices_match_gpu_specs():
+    gcp = get_provider("gcp")
+    for g in ("k80", "p100", "v100"):
+        assert gcp.price(g) == GPU_SPECS[g].transient_price
+        assert gcp.price(g, transient=False) == GPU_SPECS[g].hourly_price
+
+
+def test_gcp_sampler_golden_values():
+    """Bit-for-bit parity with the pre-provider hard-wired models: these
+    goldens were captured before the FleetProvider refactor."""
+    s = RevocationSampler(seed=0)  # default provider is gcp
+    got = [s.lifetime("us-central1", "v100") for _ in range(5)]
+    assert got[:2] == pytest.approx([1.8817134649, 11.281286695], abs=1e-9)
+    assert all(math.isinf(v) for v in got[2:])
+    assert s.prob_revoked_within("us-west1", "k80", 12.0) == pytest.approx(
+        0.052576229970637635, abs=1e-12)
+
+    m = StartupModel(3)
+    out = m.sample("p100")
+    assert out["total"] == pytest.approx(79.67202289257617, abs=1e-9)
+    assert m.mean_total("v100") == pytest.approx(84.0)
+
+    r = ReplacementModel(7)
+    assert r.sample(1.54) == pytest.approx(76.71351817939342, abs=1e-9)
+    assert r.cold_start_s(2.41) == pytest.approx(77.3352, abs=1e-9)
+
+
+def test_gcp_explicit_provider_identical_to_default():
+    a = RevocationSampler(seed=11)
+    b = RevocationSampler(seed=11, provider="gcp")
+    for _ in range(8):
+        assert (a.lifetime("us-east1", "k80")
+                == b.lifetime("us-east1", "k80"))
+
+
+# ------------------------------------------------------ AWS semantics
+def test_aws_uncapped_lifetimes_and_warning():
+    aws = get_provider("aws")
+    assert math.isinf(aws.max_lifetime_hours)
+    assert aws.warning_seconds == 120.0
+    assert aws.graceful_checkpoint_on_warning
+    law = aws.lifetime_model("us-east-1", "v100")
+    samples = law.sample(np.random.default_rng(0), 400)
+    finite = samples[np.isfinite(samples)]
+    assert finite.max() > 24.0  # no 24 h cap
+    # uncapped: revocation probability keeps growing past 24h
+    assert law.prob_revoked_within(72.0) > law.prob_revoked_within(24.0)
+    # 24 h probability matches the advisor-bucket calibration target
+    assert law.prob_revoked_within(24.0) == pytest.approx(0.45, abs=0.05)
+
+
+def test_aws_price_signal_shapes_hazard():
+    """More spot interruptions for servers launched into the demand peak
+    than into the overnight trough (short horizon)."""
+    law = get_provider("aws").lifetime_model("us-east-1", "v100")
+    peak = law.cdf(np.array([3.0]), start_hour=11.5)[0]
+    trough = law.cdf(np.array([3.0]), start_hour=23.0)[0]
+    assert peak > trough
+
+
+def test_aws_has_no_p100():
+    assert "p100" not in get_provider("aws").gpus()
+
+
+# ---------------------------------------------------- Azure semantics
+def test_azure_tiers_order_hazards():
+    az = get_provider("azure")
+    assert math.isinf(az.max_lifetime_hours)
+    assert az.warning_seconds == 30.0
+    lo = az.lifetime_model("westeurope", "k80")     # 0-5% tier
+    hi = az.lifetime_model("eastus", "v100")        # 20%+ tier
+    assert lo.prob_revoked_within(24.0) == pytest.approx(0.05)
+    assert hi.prob_revoked_within(24.0) == pytest.approx(0.30)
+    assert az.eviction_tier("eastus", "v100") == "20%+"
+
+
+def test_azure_exponential_is_memoryless():
+    law = get_provider("azure").lifetime_model("eastus", "v100")
+    rng = np.random.default_rng(1)
+    a = law.sample(rng, 5, start_hour=0.0)
+    rng = np.random.default_rng(1)
+    b = law.sample(rng, 5, start_hour=13.0)
+    np.testing.assert_allclose(a, b)
+
+
+# --------------------------------------------- cross-provider Session
+@pytest.fixture(scope="module")
+def session():
+    return Session.from_arch("qwen3-1.7b", total_steps=2000,
+                             checkpoint_interval=200, zero1=False)
+
+
+@pytest.mark.parametrize("provider", ["gcp", "aws", "azure"])
+def test_session_plan_smoke_every_provider(session, provider):
+    best, plans = session.plan(gpu="v100", n_workers=2, steps=500,
+                               hours=[0], provider=provider)
+    prov = get_provider(provider)
+    assert {p.region for p in plans} == set(prov.regions_offering("v100"))
+    assert all(p.provider == provider for p in plans)
+    assert best.expected_cost == min(p.expected_cost for p in plans)
+
+
+@pytest.mark.parametrize("provider", ["gcp", "aws", "azure"])
+def test_session_simulate_and_predict_every_provider(session, provider):
+    res = session.simulate(n_workers=2, gpu="v100", steps=300, seed=0,
+                           provider=provider)
+    assert res.steps_done == 300 and res.monetary_cost > 0
+    assert res.provider == provider
+    assert res.region == get_provider(provider).default_region
+    rep = session.predict(n_workers=2, gpu="v100", steps=1000,
+                          provider=provider)
+    assert rep.provider == provider
+    assert rep.region == get_provider(provider).default_region
+    assert rep.total_time_seconds >= 1000 / rep.cluster_speed - 1e-6
+
+
+def test_session_predict_gcp_provider_matches_default(session):
+    base = session.predict(n_workers=2, gpu="v100", steps=1000, seed=0)
+    via = session.predict(n_workers=2, gpu="v100", steps=1000, seed=0,
+                          provider="gcp")
+    assert base == via
+
+
+def test_session_default_provider_threading():
+    s = Session.from_arch("qwen3-1.7b", total_steps=500,
+                          checkpoint_interval=100, provider="azure")
+    assert s.provider.name == "azure"
+    rep = s.predict(n_workers=1, gpu="v100", steps=200)
+    assert rep.provider == "azure"
+    with pytest.raises(ValueError, match="does not offer"):
+        Session.from_arch("qwen3-1.7b", provider="aws").predict(gpu="p100")
+
+
+def test_per_call_provider_override_beats_session_default():
+    """A per-call provider must fully replace the session default — even
+    for GPUs the default market does not sell (aws has no p100)."""
+    s = Session.from_arch("qwen3-1.7b", total_steps=500,
+                          checkpoint_interval=100, provider="aws")
+    rep = s.predict(n_workers=1, gpu="p100", steps=200, provider="gcp")
+    assert rep.provider == "gcp"
+    best, _ = s.plan(gpu="p100", n_workers=1, steps=200, hours=[0],
+                     provider="azure")
+    assert best.provider == "azure"
+
+
+def test_fleet_sim_start_hour_reaches_lifetime_law():
+    """Fig 9 diurnal laws must see the planned launch hour: a V100 run
+    started inside the 4-8PM quiet window sees no revocation before the
+    window ends."""
+    from repro.core.transient.fleet import FleetSim, SimWorker
+
+    def mk(start_hour, seed):
+        workers = [SimWorker(i, "v100", "us-central1", 15.61)
+                   for i in range(4)]
+        sim = FleetSim(workers, model_gflops=1.54, model_bytes=1.87e6,
+                       step_speed_of=lambda g: 15.61,
+                       checkpoint_interval_steps=4000, checkpoint_time_s=2.0,
+                       seed=seed)
+        return sim.run(400_000, start_hour=start_hour)
+
+    for seed in range(3):
+        res = mk(16.0, seed)  # launch at 4PM: quiet until 8PM
+        early = [t for t, e in res.events
+                 if e.startswith("revoke") and t < 4 * 3600.0]
+        assert early == []
+
+
+def test_plan_launch_provider_prices_diverge():
+    """Same workload, same GPU: the three markets price it differently."""
+    costs = {}
+    for name in available_providers():
+        best, _ = plan_launch("v100", 2, 10.0, n_w=100_000, i_c=4000,
+                              t_c=2.0, hours=[0], provider=name)
+        costs[name] = best.expected_cost
+    assert len({round(c, 6) for c in costs.values()}) == 3
+
+
+# ------------------------------------------------------------------ CLI
+def test_cli_provider_flag():
+    from repro.__main__ import build_parser
+    p = build_parser()
+    args = p.parse_args(["plan", "--gpu", "v100", "--provider", "aws"])
+    assert args.provider == "aws" and args.region is None
+    args = p.parse_args(["simulate", "--provider", "azure",
+                         "--region", "eastus"])
+    assert (args.provider, args.region) == ("azure", "eastus")
+    # default market is the paper's
+    assert p.parse_args(["predict"]).provider == "gcp"
