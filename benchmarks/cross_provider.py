@@ -8,45 +8,17 @@ poses: for a fixed training job, which market finishes it cheapest, and
 what does the revocation/replacement overhead difference cost in time?
 
 Per (provider, gpu): the §V-C planner's best (region, launch-hour) cell
-(expected cost/time via Eq 4) and a 3-seed fleet-simulation average
-(realized cost/time/revocations) of that best cell.
+(expected cost/time via Eq 4) and a fleet-simulation *ensemble*
+(`FleetSim.run_many`, pre-drawn batched lifetimes) of that best cell —
+mean plus p90 of realized cost/time/revocations.
 """
 from __future__ import annotations
 
-import numpy as np
-
+from benchmarks.fleet_common import (I_C, N_W, N_WORKERS, T_C,
+                                     best_cell_ensemble)
 from repro.core.perf_model.speed_model import TABLE1_MODELS, calibrate_generators
 from repro.core.scheduler import plan_launch
-from repro.core.transient.fleet import FleetSim, SimWorker
-from repro.models import cnn
 from repro.providers import available_providers, get_provider
-
-# ResNet-32 at 4 workers, sized so the ~4-8 h wall-clock actually exposes
-# each market's revocation behavior (same workload for every provider).
-N_W = 256_000
-I_C = 4_000
-T_C = 3.84
-N_WORKERS = 4
-
-
-def _simulate(provider, gpu: str, region: str, sp: float,
-              launch_hour: float, seeds=(0, 1, 2)):
-    c_m = TABLE1_MODELS["resnet_32"]
-    times, costs, revs = [], [], []
-    for s in seeds:
-        workers = [SimWorker(i, gpu, region, sp) for i in range(N_WORKERS)]
-        sim = FleetSim(workers, model_gflops=c_m,
-                       model_bytes=4.0 * cnn.param_count(cnn.RESNET_32),
-                       step_speed_of=lambda g: sp,
-                       checkpoint_interval_steps=I_C, checkpoint_time_s=T_C,
-                       seed=s, price_of={gpu: provider.price(gpu)},
-                       provider=provider)
-        res = sim.run(N_W, max_hours=100.0, start_hour=launch_hour)
-        times.append(res.total_time_s)
-        costs.append(res.monetary_cost)
-        revs.append(res.revocations)
-    return (float(np.mean(times)), float(np.mean(costs)),
-            float(np.mean(revs)))
 
 
 def run():
@@ -62,17 +34,19 @@ def run():
             best, plans = plan_launch(gpu, N_WORKERS, sp, n_w=N_W, i_c=I_C,
                                       t_c=T_C, hours=[0, 6, 12, 18],
                                       provider=prov)
-            t_sim, c_sim, r_sim = _simulate(prov, gpu, best.region, sp,
-                                            float(best.launch_hour))
+            st = best_cell_ensemble(prov, gpu, best.region, sp,
+                                    float(best.launch_hour))
             out.append({
                 "name": f"cross_provider/{name}/{gpu}x{N_WORKERS}",
                 "value": round(best.expected_cost, 2),
                 "derived": (
                     f"best={best.region}@{best.launch_hour:02d}h "
                     f"E[time]={best.expected_time_s / 3600:.2f}h "
-                    f"E[rev]={best.expected_revocations:.2f}; simulated "
-                    f"${c_sim:.2f}/{t_sim / 3600:.2f}h "
-                    f"rev={r_sim:.1f} @ ${prov.price(gpu)}/h "
+                    f"E[rev]={best.expected_revocations:.2f}"
+                    f"±{best.revocation_stderr:.2f}; simulated (n={st.n}) "
+                    f"${st.cost_mean:.2f}/{st.time_mean_s / 3600:.2f}h "
+                    f"p90 ${st.cost_p90:.2f}/{st.time_p90_s / 3600:.2f}h "
+                    f"rev={st.revocations_mean:.1f} @ ${prov.price(gpu)}/h "
                     f"(best-cell expected cost $)"),
             })
     return out

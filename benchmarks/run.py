@@ -32,6 +32,7 @@ MODULES = [
     "cost_savings",
     "scheduler_gains",
     "cross_provider",
+    "mc_speed",
     "lm_speed_models",
     "roofline",
 ]

@@ -47,6 +47,13 @@ def build_parser() -> argparse.ArgumentParser:
         # --region defaults to None: `plan` scores every region of the
         # selected provider; simulate/predict fall back to the provider's
         # default region
+        if name == "plan":
+            q.add_argument("--samples", type=int, default=200,
+                           help="Monte-Carlo draws per (region, hour) cell")
+        elif name == "simulate":
+            q.add_argument("--samples", type=int, default=1,
+                           help="trajectories; >1 reports the p50/p90/mean "
+                                "ensemble summary (SimStats)")
 
     b = sub.add_parser("bench", help="paper table/figure benchmark driver")
     b.add_argument("--only", default="",
@@ -103,13 +110,15 @@ def _cmd_plan(args) -> int:
                                steps=args.steps,
                                checkpoint_interval=args.checkpoint_interval,
                                region=args.region, seed=args.seed,
-                               provider=args.provider)
+                               provider=args.provider, samples=args.samples)
     where = args.region or "all regions"
     print(f"arch={session.arch} provider={args.provider} gpu={args.gpu} "
           f"workers={args.workers} "
-          f"({where}): scored {len(plans)} (region, hour) cells")
+          f"({where}): scored {len(plans)} (region, hour) cells "
+          f"x {args.samples} samples")
     print(f"best: {best.region} @ {best.launch_hour:02d}h  "
-          f"E[revocations]={best.expected_revocations:.2f}  "
+          f"E[revocations]={best.expected_revocations:.2f}"
+          f"±{best.revocation_stderr:.2f}  "
           f"E[time]={best.expected_time_s:.0f}s  "
           f"E[cost]=${best.expected_cost:.2f}")
     return 0
@@ -121,7 +130,24 @@ def _cmd_simulate(args) -> int:
                            region=args.region, steps=args.steps,
                            checkpoint_interval=args.checkpoint_interval,
                            n_ps=args.n_ps, seed=args.seed,
-                           provider=args.provider)
+                           provider=args.provider, samples=args.samples)
+    if args.samples > 1:
+        st = res.stats
+        print(f"arch={session.arch} {args.workers}x{args.gpu} on "
+              f"{res.provider}/{res.region}: {st.n} trajectories")
+        if st.finished < st.n:
+            print(f"WARNING: only {st.finished}/{st.n} trajectories "
+                  f"finished all {args.steps} steps (censored at "
+                  f"max_hours or fully revoked) — the time/cost summary "
+                  f"understates the true distribution")
+        print(f"time  p50={st.time_p50_s:.0f}s p90={st.time_p90_s:.0f}s "
+              f"mean={st.time_mean_s:.0f}±{st.time_stderr_s:.0f}s")
+        print(f"cost  p50=${st.cost_p50:.2f} p90=${st.cost_p90:.2f} "
+              f"mean=${st.cost_mean:.2f}±{st.cost_stderr:.2f}")
+        print(f"revocations p50={st.revocations_p50:.1f} "
+              f"p90={st.revocations_p90:.1f} "
+              f"mean={st.revocations_mean:.2f}")
+        return 0
     print(f"arch={session.arch} {args.workers}x{args.gpu} on "
           f"{res.provider}/{res.region}: "
           f"{res.steps_done} steps in {res.total_time_s:.0f}s  "

@@ -11,3 +11,5 @@ repro` CLI (`repro.__main__`) is a thin shell over this package.
 from repro.api.events import Event, EventBus  # noqa: F401
 from repro.api.serving import ServeReport, generate  # noqa: F401
 from repro.api.session import PredictionReport, Session  # noqa: F401
+from repro.core.transient.fleet import (FleetEnsemble, SimResult,  # noqa: F401
+                                        SimStats)

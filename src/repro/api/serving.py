@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import jit_cache
 from repro.models import api
 
 
@@ -46,7 +47,12 @@ def generate(cfg: ModelConfig, params=None, *, batch: int = 4,
         prompt = jax.random.randint(key, (batch, prompt_len), 0,
                                     cfg.vocab_size)
 
-    step = jax.jit(lambda p, s, t, i: api.decode_step(p, cfg, s, t, i))
+    # the jitted decode step is memoized per ModelConfig: repeated
+    # Session.serve calls (and fresh Sessions on the same arch) reuse one
+    # traced callable instead of re-jitting every generate()
+    step = jit_cache.cached(
+        "decode_step", (cfg,),
+        lambda: jax.jit(lambda p, s, t, i: api.decode_step(p, cfg, s, t, i)))
 
     t0 = time.monotonic()
     logits = None

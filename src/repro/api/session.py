@@ -36,7 +36,8 @@ from repro.core.perf_model.cluster_model import (Eq4Inputs, PSBottleneckModel,
 from repro.core.perf_model.speed_model import calibrate_generators
 from repro.core.scheduler import LaunchPlan, plan_launch
 from repro.core.trainer import MembershipEvent, TrainReport, TransientTrainer
-from repro.core.transient.fleet import FleetSim, SimResult, SimWorker
+from repro.core.transient.fleet import (FleetEnsemble, FleetSim, SimResult,
+                                        SimStats, SimWorker)
 from repro.core.transient.replacement import ReplacementModel
 from repro.core.transient.startup import StartupModel
 from repro.data.pipeline import ShardedLoader, source_for_config
@@ -178,13 +179,17 @@ class Session:
              hours: Optional[List[int]] = None,
              region: Optional[str] = None,
              seed: int = 0,
-             provider: Optional[object] = None
+             provider: Optional[object] = None,
+             samples: int = 200
              ) -> Tuple[LaunchPlan, List[LaunchPlan]]:
         """Revocation-aware (region, launch-hour) planning for this model.
 
         `region=None` scores every region offering `gpu`; pass a region to
         constrain the plan to it. `provider` picks the transient market
-        (default: the session's, normally "gcp").
+        (default: the session's, normally "gcp"). `samples` sets the
+        Monte-Carlo draws per (region, hour) cell — every returned
+        `LaunchPlan` carries the binomial `revocation_stderr` of its
+        E[revocations] estimate.
         """
         prov = self._provider(provider)
         # validate (gpu, region) BEFORE the MC sweep so a typo'd region
@@ -196,7 +201,7 @@ class Session:
             i_c=(self.run.checkpoint_interval if checkpoint_interval is None
                  else checkpoint_interval),
             t_c=t_c if t_c is not None else self.checkpoint_seconds(),
-            hours=hours, seed=seed, provider=prov,
+            hours=hours, seed=seed, provider=prov, samples=samples,
             # the session's real model complexity, so plan() and predict()
             # agree on the Fig 10 replacement term for the same cell
             model_gflops=self.model_gflops())
@@ -216,13 +221,20 @@ class Session:
                  handover: bool = True,
                  max_hours: float = 48.0,
                  provider: Optional[object] = None,
-                 start_hour: float = 0.0) -> SimResult:
-        """Discrete-event simulation of one run on a transient cluster.
+                 start_hour: float = 0.0,
+                 samples: int = 1):
+        """Discrete-event simulation on a transient cluster.
 
         Either a homogeneous (`n_workers` x `gpu`) cluster or an explicit
         heterogeneous `counts` mapping gpu -> count. `provider` picks the
         transient market; `region=None` uses that market's default region;
         `start_hour` is the local launch hour (diurnal lifetime laws).
+
+        `samples=1` (default) runs one trajectory and returns a
+        `SimResult`, bit-identical to the pre-ensemble behavior for a
+        fixed seed. `samples>1` runs a `FleetSim.run_many` ensemble with
+        pre-drawn batched lifetimes and returns a `FleetEnsemble` whose
+        `.stats` is the p50/p90/mean `SimStats` summary.
         """
         prov = self._provider(provider)
         region = region or prov.default_region
@@ -249,6 +261,9 @@ class Session:
             checkpoint_interval_steps=i_c, checkpoint_time_s=t_c, n_ps=n_ps,
             seed=seed, replace=replace, handover=handover,
             price_of={g: prov.price(g) for g in counts}, provider=prov)
+        if samples > 1:
+            return sim.run_many(n_steps, samples, max_hours=max_hours,
+                                start_hour=start_hour)
         return sim.run(n_steps, max_hours=max_hours, start_hour=start_hour)
 
     # ------------------------------------------------ Eq (4)/(5) predict

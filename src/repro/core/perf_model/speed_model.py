@@ -66,15 +66,26 @@ class GPUStepTimeModel:
         return np.maximum(1e-4, rng.normal(t, STEP_TIME_COV * t, size=n))
 
 
+_GENERATOR_CACHE: Optional[Dict[str, GPUStepTimeModel]] = None
+
+
 def calibrate_generators() -> Dict[str, GPUStepTimeModel]:
-    """Anchor each GPU's step-time curve at Table I's published points."""
-    out = {}
-    for gpu, speeds in TABLE1_SPEED.items():
-        c = np.array([TABLE1_MODELS[m] for m in speeds])
-        t = np.array([1.0 / s for s in speeds.values()])
-        order = np.argsort(c)
-        out[gpu] = GPUStepTimeModel(gpu, c[order], t[order])
-    return out
+    """Anchor each GPU's step-time curve at Table I's published points.
+
+    Memoized at module level — the calibration is pure (Table I constants
+    only) and sits on every Session/benchmark startup path, so repeated
+    calls share the same `GPUStepTimeModel` instances. Returns a fresh
+    dict each time so callers may add/drop entries without aliasing."""
+    global _GENERATOR_CACHE
+    if _GENERATOR_CACHE is None:
+        out = {}
+        for gpu, speeds in TABLE1_SPEED.items():
+            c = np.array([TABLE1_MODELS[m] for m in speeds])
+            t = np.array([1.0 / s for s in speeds.values()])
+            order = np.argsort(c)
+            out[gpu] = GPUStepTimeModel(gpu, c[order], t[order])
+        _GENERATOR_CACHE = out
+    return dict(_GENERATOR_CACHE)
 
 
 def synth_dataset(models: Dict[str, float],

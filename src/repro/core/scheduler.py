@@ -9,6 +9,15 @@ for E[revocations] during the run, push that through Eq (4) for expected
 wall-clock, and price the result (transient rates + replacement overheads).
 Returns the Pareto plan (min expected cost, tie-broken by time).
 
+The Monte-Carlo core is batched (docs/performance.md): each (region, hour)
+cell is ONE `RevocationSampler.lifetimes` draw — the lifetime model is
+resolved once and `samples` candidates come back as an array, then scored
+through the shared Eq (4) (`predict_total_time`, so plan() and predict()
+can never drift apart) with the startup/replacement means hoisted out of
+the loop. Every cell also reports the binomial standard error of its
+E[revocations] estimate, threaded through `Session.plan` and the `plan`
+CLI.
+
 `provider=` selects the market being planned over (DESIGN.md §5): regions,
 lifetime laws, startup/replacement overheads and prices all come from the
 `repro.providers` adapter, so the same planner compares GCP preemptible,
@@ -40,6 +49,10 @@ class LaunchPlan:
     expected_time_s: float
     expected_cost: float
     provider: str = "gcp"
+    #: binomial standard error of `expected_revocations` (same units)
+    revocation_stderr: float = 0.0
+    #: Monte-Carlo sample count behind the estimate
+    samples: int = 0
 
 
 def expected_revocations_mc(region: str, gpu: str, start_hour: float,
@@ -47,15 +60,38 @@ def expected_revocations_mc(region: str, gpu: str, start_hour: float,
                             samples: int = 200, seed: int = 0,
                             provider: object = "gcp") -> float:
     """Diurnal-aware E[revocations]: MC over the lifetime sampler (the CDF
-    alone is launch-hour-agnostic)."""
+    alone is launch-hour-agnostic). One batched draw; see the `_stats`
+    variant for the standard error."""
+    return expected_revocations_mc_stats(region, gpu, start_hour, run_hours,
+                                         n_workers, samples, seed,
+                                         provider)[0]
+
+
+def expected_revocations_mc_stats(region: str, gpu: str, start_hour: float,
+                                  run_hours: float, n_workers: int,
+                                  samples: int = 200, seed: int = 0,
+                                  provider: object = "gcp"
+                                  ) -> Tuple[float, float]:
+    """(E[revocations], standard error) from one batched lifetime draw."""
+    if samples < 1:
+        raise ValueError(f"need at least one MC sample, got {samples}")
     samp = RevocationSampler(seed, provider)
     horizon = min(run_hours, samp.provider.max_lifetime_hours)
-    hits = 0
-    for s in range(samples):
-        lt = samp.lifetime(region, gpu, start_hour=start_hour)
-        if math.isfinite(lt) and lt <= horizon:
-            hits += 1
-    return n_workers * hits / samples
+    lts = samp.lifetimes(region, gpu, samples, start_hour)
+    p_hat = _hit_fraction(lts, horizon)
+    return n_workers * p_hat, _binomial_stderr(p_hat, samples, n_workers)
+
+
+def _hit_fraction(lifetimes: np.ndarray, horizon_hours: float) -> float:
+    """Fraction of sampled lifetimes revoked inside the horizon."""
+    return float(np.count_nonzero(
+        np.isfinite(lifetimes) & (lifetimes <= horizon_hours))
+        / max(len(lifetimes), 1))
+
+
+def _binomial_stderr(p_hat: float, samples: int, n_workers: int) -> float:
+    return n_workers * math.sqrt(max(p_hat * (1.0 - p_hat), 0.0)
+                                 / max(samples, 1))
 
 
 def plan_launch(gpu: str, n_workers: int, worker_speed: float,
@@ -63,40 +99,68 @@ def plan_launch(gpu: str, n_workers: int, worker_speed: float,
                 hours: Optional[List[int]] = None,
                 seed: int = 0,
                 provider: object = "gcp",
-                model_gflops: float = 1.54) -> Tuple[LaunchPlan,
-                                                     List[LaunchPlan]]:
+                model_gflops: float = 1.54,
+                samples: int = 200) -> Tuple[LaunchPlan,
+                                             List[LaunchPlan]]:
     """Scores all (region, hour) cells of one provider; returns (best, all).
 
     worker_speed: steps/s per worker for the target model (from the §III
     predictors); model_gflops: its complexity C_m, which sets the Fig 10
-    replacement cold-start (default: the paper's ResNet-32). Costing:
-    transient hourly price x workers x expected time, replacement overhead
-    included via Eq (4).
+    replacement cold-start (default: the paper's ResNet-32); samples: MC
+    draws per (region, hour) cell. Costing: transient hourly price x
+    workers x expected time, replacement overhead included via Eq (4).
+
+    The MC horizon is the Eq (4) *wall-clock* — compute plus checkpoint
+    pauses, then one fixed-point iteration adding the revocation overhead
+    itself — not the compute-only time: a checkpoint-heavy run stays
+    exposed to the market for every pause too, and the lifetimes are drawn
+    once per cell so the refined horizon reuses the same draws.
     """
     from repro.providers import get_provider
+    if samples < 1:
+        raise ValueError(f"need at least one MC sample, got {samples}")
     prov = get_provider(provider)
     prov.check_gpu_offered(gpu)
     hours = hours if hours is not None else list(range(0, 24, 3))
-    startup = StartupModel(seed, prov)
-    repl = ReplacementModel(seed, prov)
+    if i_c <= 0:  # no checkpointing: zero pauses, Eq (4) stays defined
+        i_c, t_c = n_w, 0.0
+    # decorrelated streams, matching FleetSim's seed+1/seed+2 convention
+    # (the MC sampler itself owns `seed`)
+    startup = StartupModel(seed + 1, prov)
+    repl = ReplacementModel(seed + 2, prov)
     price = prov.price(gpu)
     sp = cluster_speed([WorkerSpec(gpu, worker_speed)] * n_workers)
-    base_hours = n_w / sp / 3600.0
     t_p = startup.mean_total(gpu)
     t_s = repl.cold_start_s(model_gflops)
+
+    def eq4(n_r: float) -> float:
+        # spread Pr over workers equally for Eq (5)
+        return predict_total_time(sp, Eq4Inputs(
+            n_w, i_c, t_c, t_p, t_s, [n_r / n_workers] * n_workers))
+
+    base_s = eq4(0.0)                       # Eq (4) without revocations
+    horizon0 = min(base_s / 3600.0, prov.max_lifetime_hours)
     plans: List[LaunchPlan] = []
     for region in prov.regions_offering(gpu):
         for h in hours:
-            n_r = expected_revocations_mc(region, gpu, float(h), base_hours,
-                                          n_workers, seed=seed,
-                                          provider=prov)
-            # spread Pr over workers equally for Eq (5)
-            probs = [n_r / n_workers] * n_workers
-            t = predict_total_time(sp, Eq4Inputs(n_w, i_c, t_c, t_p, t_s,
-                                                 probs))
+            # one batched draw per cell — same seed per cell, so cells
+            # are compared under common random numbers (as the pre-
+            # batched planner did by re-seeding per cell)
+            samp = RevocationSampler(seed, prov)
+            lts = samp.lifetimes(region, gpu, samples, float(h))
+            p0 = _hit_fraction(lts, horizon0)
+            # one Eq (4) iteration: revocation overhead extends exposure,
+            # re-scored against the same draws
+            horizon1 = min(eq4(n_workers * p0) / 3600.0,
+                           prov.max_lifetime_hours)
+            p1 = _hit_fraction(lts, horizon1)
+            n_r = n_workers * p1
+            t = eq4(n_r)
             cost = (t / 3600.0) * n_workers * price \
                 + n_r * (t_p / 3600.0) * price
-            plans.append(LaunchPlan(region, gpu, h, n_workers, n_r, t, cost,
-                                    prov.name))
+            plans.append(LaunchPlan(
+                region, gpu, h, n_workers, n_r, t, cost, prov.name,
+                revocation_stderr=_binomial_stderr(p1, samples, n_workers),
+                samples=samples))
     best = min(plans, key=lambda p: (p.expected_cost, p.expected_time_s))
     return best, plans

@@ -25,9 +25,11 @@ import jax.numpy as jnp
 
 from repro.checkpoint import Checkpointer
 from repro.configs.base import ModelConfig, RunConfig
+from repro.core import jit_cache
 from repro.core.controller import Controller, Detection
 from repro.core.profiler import PerformanceProfiler
 from repro.data.pipeline import ShardedLoader
+from repro.dist import sharding as sh
 from repro.dist.elastic import ElasticMembership, Member
 from repro.launch import steps as st
 from repro.models import api
@@ -71,9 +73,19 @@ class TransientTrainer:
         self.controller = Controller()
         self.ckpt = Checkpointer(run.checkpoint_dir, holder=holder)
         self.predicted_speed = predicted_speed
-        self.train_step, self.opt = st.make_train_step(cfg, run)
-        self._jit_step = jax.jit(self.train_step, donate_argnums=(0,))
+        # jit/lower artifacts are memoized across trainers/Sessions keyed
+        # on (cfg, trace-relevant run fields, mesh, rules) — rebuilding a
+        # Session no longer re-traces an identical step (jit_cache)
+        self.train_step, self.opt, self._jit_step = jit_cache.cached(
+            "train_step",
+            (cfg, jit_cache.normalized_run(run), None, sh.MEGATRON_RULES),
+            lambda: self._build_step(cfg, run))
         self.detections: List[Detection] = []
+
+    @staticmethod
+    def _build_step(cfg: ModelConfig, run: RunConfig):
+        train_step, opt = st.make_train_step(cfg, run)
+        return train_step, opt, jax.jit(train_step, donate_argnums=(0,))
 
     # ------------------------------------------------------------------ state
     def init_state(self, key=None) -> st.TrainState:

@@ -9,7 +9,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -52,6 +52,74 @@ class SimResult:
     region: str = ""
 
 
+def _percentiles(xs: List[float]) -> Tuple[float, float, float]:
+    a = np.asarray(xs, float)
+    return (float(np.percentile(a, 50)), float(np.percentile(a, 90)),
+            float(a.mean()))
+
+
+@dataclasses.dataclass
+class SimStats:
+    """Distribution summary of a `FleetEnsemble` (§VI-A, beyond the paper's
+    single-trajectory validation): p50/p90/mean of wall-clock, cost and
+    revocations across trajectories, plus the standard error of the means.
+
+    `finished` counts trajectories that completed every requested step;
+    when `finished < n` the rest were censored (hit `max_hours`, or died
+    with `replace=False`), so the time/cost percentiles understate the
+    true distribution — check it before trusting the summary."""
+    n: int
+    time_p50_s: float
+    time_p90_s: float
+    time_mean_s: float
+    time_stderr_s: float
+    cost_p50: float
+    cost_p90: float
+    cost_mean: float
+    cost_stderr: float
+    revocations_p50: float
+    revocations_p90: float
+    revocations_mean: float
+    replacements_mean: float
+    finished: int = 0
+
+    @classmethod
+    def from_results(cls, results: List["SimResult"],
+                     total_steps: Optional[int] = None) -> "SimStats":
+        times = [r.total_time_s for r in results]
+        costs = [r.monetary_cost for r in results]
+        revs = [float(r.revocations) for r in results]
+        n = len(results)
+        finished = (n if total_steps is None else
+                    sum(1 for r in results if r.steps_done >= total_steps))
+        t50, t90, tm = _percentiles(times)
+        c50, c90, cm = _percentiles(costs)
+        r50, r90, rm = _percentiles(revs)
+
+        def sem(xs):  # unbiased (ddof=1) standard error of the mean
+            if n <= 1:
+                return 0.0
+            return float(np.std(xs, ddof=1)) / math.sqrt(n)
+
+        return cls(n, t50, t90, tm, sem(times),
+                   c50, c90, cm, sem(costs),
+                   r50, r90, rm,
+                   float(np.mean([r.replacements for r in results])),
+                   finished=finished)
+
+
+@dataclasses.dataclass
+class FleetEnsemble:
+    """`FleetSim.run_many` output: every trajectory plus summary stats."""
+    results: List[SimResult]
+    stats: SimStats
+    provider: str = "gcp"
+    region: str = ""
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+
 class FleetSim:
     """Simulate one training run on a transient cluster.
 
@@ -74,6 +142,10 @@ class FleetSim:
         self.workers = {w.wid: w for w in workers}
         if workers:
             workers[0].is_chief = True
+        # immutable launch roster, so `run_many` can respawn trajectories
+        # after `run` has mutated self.workers
+        self._roster = tuple((w.wid, w.gpu, w.region, w.speed)
+                             for w in workers)
         self.model_gflops = model_gflops
         self.model_bytes = model_bytes
         self.speed_of = step_speed_of
@@ -83,11 +155,26 @@ class FleetSim:
         self.replace = replace
         self.handover = handover
         self.provider = get_provider(provider)
+        self.seed = seed
         self.rev = RevocationSampler(seed, self.provider)
         self.startup = StartupModel(seed + 1, self.provider)
         self.repl = ReplacementModel(seed + 2, self.provider)
         self.rng = np.random.default_rng(seed + 3)
         self.price_of = price_of or {}
+
+    def _respawn(self, seed: int) -> "FleetSim":
+        """A fresh simulator over the same launch roster and physics, with
+        its own seed — one ensemble trajectory."""
+        workers = [SimWorker(wid, gpu, region, speed)
+                   for wid, gpu, region, speed in self._roster]
+        return FleetSim(workers, model_gflops=self.model_gflops,
+                        model_bytes=self.model_bytes,
+                        step_speed_of=self.speed_of,
+                        checkpoint_interval_steps=self.i_c,
+                        checkpoint_time_s=self.t_c, n_ps=self.n_ps,
+                        seed=seed, replace=self.replace,
+                        handover=self.handover, price_of=self.price_of,
+                        provider=self.provider)
 
     def _cluster_speed(self) -> float:
         alive = [WorkerSpec(w.gpu, w.speed)
@@ -98,14 +185,21 @@ class FleetSim:
         return cluster_speed(alive, ps)
 
     def run(self, total_steps: int, max_hours: float = 48.0,
-            start_hour: float = 0.0) -> SimResult:
+            start_hour: float = 0.0, *,
+            initial_lifetimes: Optional[Sequence[float]] = None) -> SimResult:
         """`start_hour`: local launch hour, so diurnal lifetime laws (GCP
-        Fig 9, AWS price signal) see the planned launch cell."""
+        Fig 9, AWS price signal) see the planned launch cell.
+        `initial_lifetimes`: pre-drawn lifetimes (hours, launch-roster
+        order, np.inf = survived) — `run_many` injects one batched draw
+        per trajectory; the default draws from `self.rev` as before."""
         q: List[FleetEvent] = []
         next_wid = max(self.workers) + 1
         # schedule revocations
-        for w in self.workers.values():
-            lt = self.rev.lifetime(w.region, w.gpu, start_hour=start_hour)
+        for idx, w in enumerate(self.workers.values()):
+            lt = (float(initial_lifetimes[idx])
+                  if initial_lifetimes is not None
+                  else self.rev.lifetime(w.region, w.gpu,
+                                         start_hour=start_hour))
             if math.isfinite(lt):
                 heapq.heappush(q, FleetEvent(lt * 3600.0, "revoke",
                                              {"wid": w.wid}))
@@ -235,6 +329,42 @@ class FleetSim:
                          recompute, lost, events, cost,
                          provider=self.provider.name,
                          region=regions.pop() if len(regions) == 1 else "")
+
+    def run_many(self, total_steps: int, n: int, max_hours: float = 48.0,
+                 start_hour: float = 0.0) -> FleetEnsemble:
+        """Simulate `n` independent trajectories of the same launch.
+
+        All initial lifetimes are pre-drawn here in one batched call per
+        (region, gpu) group of the roster — an (n, count) matrix from
+        `RevocationSampler.lifetimes` seeded with `self.seed` — and each
+        trajectory then runs on its own decorrelated seed block
+        (`seed + 1 + 4*j`, leaving room for the simulator's internal
+        seed/seed+1/seed+2/seed+3 streams), consumed only by replacement
+        joins and startup draws. `run(...)` with the same seed remains the
+        single-trajectory path; `run_many` never perturbs its streams.
+        """
+        if n < 1:
+            raise ValueError(f"need at least one trajectory, got {n}")
+        groups: Dict[Tuple[str, str], List[int]] = {}
+        for idx, (_, gpu, region, _) in enumerate(self._roster):
+            groups.setdefault((region, gpu), []).append(idx)
+        ens_samp = RevocationSampler(self.seed, self.provider)
+        pre = np.empty((n, len(self._roster)))
+        for (region, gpu), idxs in groups.items():
+            draws = ens_samp.lifetimes(region, gpu, n * len(idxs),
+                                       start_hour)
+            pre[:, idxs] = draws.reshape(n, len(idxs))
+        results = []
+        for j in range(n):
+            sim = self._respawn(self.seed + 1 + 4 * j)
+            results.append(sim.run(total_steps, max_hours, start_hour,
+                                   initial_lifetimes=pre[j]))
+        regions = {r.region for r in results}
+        return FleetEnsemble(results,
+                             SimStats.from_results(results, total_steps),
+                             provider=self.provider.name,
+                             region=regions.pop() if len(regions) == 1
+                             else "")
 
 
 #: Long-form alias used by the docs and the provider layer.

@@ -51,15 +51,19 @@ _SHAPE_HINTS: Dict[Tuple[str, str], Tuple[float, float]] = {
 
 # Fig 9: diurnal hazard multipliers (local hour). K80 peaks ~10AM;
 # V100 has no revocations 4-8PM; P100 mildly business-hours-loaded.
-def _diurnal_weight(gpu: str, hour: float) -> float:
-    h = hour % 24.0
+# Upper bound on every weight, used as the thinning envelope.
+_DIURNAL_MAX_WEIGHT = 2.5
+
+
+def _diurnal_weight(gpu: str, hour) -> np.ndarray:
+    """Vectorized over `hour` (scalar in, scalar-shaped array out)."""
+    h = np.asarray(hour, float) % 24.0
     if gpu == "k80":
-        return 1.0 + 1.5 * math.exp(-((h - 10.0) ** 2) / (2 * 2.0 ** 2))
+        return 1.0 + 1.5 * np.exp(-((h - 10.0) ** 2) / (2 * 2.0 ** 2))
     if gpu == "v100":
-        if 16.0 <= h < 20.0:
-            return 0.0
-        return 1.0 + 0.6 * math.exp(-((h - 9.0) ** 2) / (2 * 3.0 ** 2))
-    return 1.0 + 0.8 * math.exp(-((h - 13.0) ** 2) / (2 * 4.0 ** 2))
+        w = 1.0 + 0.6 * np.exp(-((h - 9.0) ** 2) / (2 * 3.0 ** 2))
+        return np.where((h >= 16.0) & (h < 20.0), 0.0, w)
+    return 1.0 + 0.8 * np.exp(-((h - 13.0) ** 2) / (2 * 4.0 ** 2))
 
 
 @dataclasses.dataclass
@@ -97,26 +101,87 @@ class LifetimeModel:
     def sample(self, rng: np.random.Generator, n: int = 1,
                start_hour: float = 0.0) -> np.ndarray:
         """Sample lifetimes in hours; np.inf = survived to the 24h cutoff.
-        Diurnal modulation: thinning on the hazard by local-time weight."""
+        Thin wrapper over `sample_batch` (identical RNG stream at n=1)."""
+        return self.sample_batch(rng, n, start_hour)
+
+    def _inverse_cdf(self, uu: np.ndarray, raw24: float) -> np.ndarray:
+        """Candidate revoked lifetimes from uniforms (truncated Weibull)."""
+        return self.lam * (-np.log(1.0 - uu * raw24)) ** (1.0 / self.k)
+
+    def sample_batch(self, rng: np.random.Generator, n: int,
+                     start_hour: float = 0.0) -> np.ndarray:
+        """Vectorized lifetime sampling; np.inf = survived to the 24h cutoff.
+
+        Diurnal modulation is rejection sampling (thinning) on the hazard
+        by the local-time weight. For n == 1 the rejection runs in the
+        exact per-slot draw order of the pre-vectorization scalar loop, so
+        fixed-seed golden values (provider parity tests) stay
+        bit-identical. For n > 1 the thinning is *pooled*: candidates for
+        every revoked slot are drawn and accept-tested as whole arrays
+        (oversampled by the expected rejection rate), and accepted draws
+        fill the slots in order — slots are iid, so the pooled scheme
+        samples the identical distribution in a bounded handful of rounds
+        instead of one Python round per rejection.
+        """
+        if n == 1:
+            return self._sample_scalar(rng, 1, start_hour)
+        u = rng.uniform(size=n)
+        out = np.full(n, np.inf)
+        revoked = u < self.p24
+        m = int(np.count_nonzero(revoked))
+        if m == 0:
+            return out
+        raw24 = 1.0 - math.exp(-((MAX_LIFETIME_H / self.lam) ** self.k))
+        inv_env = 1.0 / _DIURNAL_MAX_WEIGHT
+        vals = np.empty(m)
+        got = 0
+        for _ in range(16):
+            need = m - got
+            # ~1/E[w/2.5] candidates per still-empty slot, padded so one
+            # round almost always suffices
+            k = 3 * need + 16
+            cand = self._inverse_cdf(rng.uniform(size=k), raw24)
+            w = _diurnal_weight(self.gpu, start_hour + cand)
+            acc = cand[rng.uniform(size=k) < w * inv_env]
+            take = min(acc.size, need)
+            vals[got:got + take] = acc[:take]
+            got += take
+            if got == m:
+                break
+        if got < m:
+            # pathologically unlucky tail (the slot-wise loop's 64-round
+            # cap, ~(1-p)^64): keep the last candidates, pushing any that
+            # sit in a hard-zero window past it
+            cand = self._inverse_cdf(rng.uniform(size=m - got), raw24)
+            w = _diurnal_weight(self.gpu, start_hour + cand)
+            vals[got:] = np.where(w == 0.0, cand + 4.0, cand)
+        out[revoked] = np.minimum(vals, MAX_LIFETIME_H)
+        return out
+
+    def _sample_scalar(self, rng: np.random.Generator, n: int,
+                       start_hour: float = 0.0) -> np.ndarray:
+        """The pre-vectorization per-slot rejection loop, draw-for-draw:
+        per round one acceptance uniform, then (if rejected) one resample
+        uniform, 64-round cap with the hard-zero push. Kept verbatim as
+        the n=1 dispatch target so fixed-seed goldens and interleaved
+        scalar `lifetime()` streams stay bit-identical."""
         u = rng.uniform(size=n)
         out = np.full(n, np.inf)
         revoked = u < self.p24
         # inverse-CDF within the revoked mass
         uu = rng.uniform(size=n)
         raw24 = 1.0 - math.exp(-((MAX_LIFETIME_H / self.lam) ** self.k))
-        t = self.lam * (-np.log(1.0 - uu * raw24)) ** (1.0 / self.k)
-        # diurnal thinning: resample times rejected by the hour weight
+        t = self._inverse_cdf(uu, raw24)
         for i in np.where(revoked)[0]:
             accepted = False
             for _ in range(64):
-                w = _diurnal_weight(self.gpu, start_hour + t[i])
-                if rng.uniform() < w / 2.5:  # max weight 2.5
+                w = float(_diurnal_weight(self.gpu, start_hour + t[i]))
+                if rng.uniform() < w / _DIURNAL_MAX_WEIGHT:
                     accepted = True
                     break
-                uu_i = rng.uniform()
-                t[i] = self.lam * (-np.log(1.0 - uu_i * raw24)) ** (1.0 / self.k)
-            if not accepted and _diurnal_weight(
-                    self.gpu, start_hour + t[i]) == 0.0:
+                t[i] = float(self._inverse_cdf(rng.uniform(), raw24))
+            if not accepted and float(_diurnal_weight(
+                    self.gpu, start_hour + t[i])) == 0.0:
                 t[i] += 4.0  # hard-zero window: push past it
             out[i] = min(t[i], MAX_LIFETIME_H)
         return out
@@ -149,8 +214,15 @@ class RevocationSampler:
         self.provider = get_provider(self.provider)
 
     def lifetime(self, region: str, gpu: str, start_hour: float = 0.0) -> float:
+        return float(self.lifetimes(region, gpu, 1, start_hour)[0])
+
+    def lifetimes(self, region: str, gpu: str, n: int,
+                  start_hour: float = 0.0) -> np.ndarray:
+        """Batched lifetimes: resolves the lifetime model ONCE and draws
+        `n` samples in one vectorized call — the Monte-Carlo hot path of
+        the §V-C planner and the simulation ensemble."""
         m = self.provider.lifetime_model(region, gpu)
-        return float(m.sample(self.rng, 1, start_hour)[0])
+        return m.sample_batch(self.rng, n, start_hour)
 
     def prob_revoked_within(self, region: str, gpu: str,
                             t_hours: float) -> float:

@@ -52,6 +52,14 @@ class LifetimeLaw(abc.ABC):
                start_hour: float = 0.0) -> np.ndarray:
         """Sample lifetimes (hours); np.inf = survived the horizon."""
 
+    def sample_batch(self, rng: np.random.Generator, n: int,
+                     start_hour: float = 0.0) -> np.ndarray:
+        """Batched sampling for the Monte-Carlo engine. The default
+        delegates to `sample`, which every built-in adapter already
+        implements as a vectorized draw; override only when the batched
+        path differs from the scalar one (e.g. GCP's diurnal thinning)."""
+        return self.sample(rng, int(n), start_hour)
+
     @abc.abstractmethod
     def mean_time_to_revocation(self) -> float:
         """Conditional mean lifetime of revoked servers (hours)."""
