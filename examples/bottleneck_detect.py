@@ -2,7 +2,11 @@
 
 Streams measured speeds (async-PS queue sim) into the profiler, lets the
 controller compare against the composed prediction (6.7% threshold after a
-30s warmup), and provisions a second parameter server when flagged.
+30s warmup), and follows the controller's escalation (docs/DESIGN.md §6):
+compress the update payload first (free — no new server), then provision
+a second parameter server if the cluster is still saturated. ResNet-32 is
+RPC-bound (97 tensors), so compression alone does not move it and the
+controller escalates to the PS lever.
 
 PYTHONPATH=src python examples/bottleneck_detect.py
 """
@@ -46,11 +50,22 @@ def main():
               f"(deviation {det.deviation*100:.1f}%)")
         if det.bottleneck:
             print(f"BOTTLENECK -> {det.action.value}: {det.note}")
-            if det.action is Action.ADD_PARAMETER_SERVER:
-                res2 = ps_queue_sim([step_p100] * n_workers, mb, n_ps=2,
-                                    steps=200, n_tensors=nt)
+            if det.action is Action.ENABLE_COMPRESSION:
+                ps = ctrl.mitigate_compression(ps, "int8")
+                res2 = ps_queue_sim([step_p100] * n_workers, mb, n_ps=1,
+                                    steps=200, n_tensors=nt,
+                                    grad_compression=ps.compression)
                 gain = (res2.cluster_speed - measured) / measured * 100
-                print(f"after adding PS: {res2.cluster_speed:.2f} steps/s "
+                print(f"after int8 compression: {res2.cluster_speed:.2f} "
+                      f"steps/s (+{gain:.1f}%)")
+                det = ctrl.check(prof, predicted, ps, workers)
+            if det.action is Action.ADD_PARAMETER_SERVER:
+                ps = ctrl.mitigate_ps(ps)
+                res3 = ps_queue_sim([step_p100] * n_workers, mb,
+                                    n_ps=ps.n_ps, steps=200, n_tensors=nt,
+                                    grad_compression=ps.compression)
+                gain = (res3.cluster_speed - measured) / measured * 100
+                print(f"after adding PS: {res3.cluster_speed:.2f} steps/s "
                       f"(+{gain:.1f}%; paper reports up to 70.6%)")
         else:
             print("no bottleneck: measurement matches the model")

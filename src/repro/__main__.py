@@ -75,6 +75,20 @@ def _cmd_train(args) -> int:
     from repro.core.trainer import MembershipEvent
 
     session = cli.session_from_args(args)
+    if args.mode == "async_ps":
+        if args.revoke_at or args.checkpoint_dir:
+            raise ValueError("--revoke-at/--checkpoint-dir apply to "
+                             "--mode sync only (the async-PS emulation "
+                             "has no checkpointing or membership events)")
+        rep = session.train(args.steps, global_batch=args.global_batch,
+                            seq_len=args.seq, members=args.members,
+                            mode="async_ps")
+        stale = session.bus.of_kind("staleness")[-1].payload
+        curve = (f"loss {rep.losses[0]:.3f}->{rep.losses[-1]:.3f} "
+                 if rep.losses else "")
+        print(f"arch={args.arch} mode=async_ps updates={rep.steps_run} "
+              f"{curve}staleness_hist={stale['hist']}")
+        return 0
     events = []
     if args.revoke_at and args.members > 1:
         events.append(MembershipEvent(step=args.revoke_at, kind="revoke",
@@ -82,10 +96,14 @@ def _cmd_train(args) -> int:
     rep = session.train(args.steps, global_batch=args.global_batch,
                         seq_len=args.seq, members=args.members,
                         events=events, checkpoint_dir=args.checkpoint_dir)
+    compressed = [e.payload for e in session.bus.of_kind("step")
+                  if "payload_bytes" in e.payload]
+    extra = (f" payload={compressed[-1]['payload_bytes']:.0f}B/"
+             f"{compressed[-1]['grad_compression']}" if compressed else "")
     print(f"arch={args.arch} steps={rep.steps_run} "
           f"loss {rep.losses[0]:.3f}->{rep.losses[-1]:.3f} "
           f"speed={rep.speed or 0:.2f} steps/s epochs={rep.epochs} "
-          f"checkpoints={rep.checkpoints}")
+          f"checkpoints={rep.checkpoints}{extra}")
     return 0
 
 

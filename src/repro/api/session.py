@@ -41,6 +41,7 @@ from repro.core.transient.fleet import (FleetEnsemble, FleetSim, SimResult,
 from repro.core.transient.replacement import ReplacementModel
 from repro.core.transient.startup import StartupModel
 from repro.data.pipeline import ShardedLoader, source_for_config
+from repro.dist.compression import compression_ratio
 from repro.dist.elastic import Member
 from repro.providers import FleetProvider, get_provider
 
@@ -63,6 +64,9 @@ class PredictionReport:
     worker_speed: float          # steps/s solo (§III predictor)
     cluster_speed: float         # steps/s, PS-capped (Fig 4)
     ps_bottlenecked: bool
+    ps_capacity: float           # PS ceiling, compression-scaled (§VI-B)
+    grad_compression: str        # wire scheme the capacity model assumed
+    payload_bytes: float         # per-push update size under that scheme
     checkpoint_seconds: float    # T_c (§IV)
     provision_seconds: float     # T_p (§V-B)
     replacement_seconds: float   # T_s (Fig 10)
@@ -87,6 +91,7 @@ class Session:
         self.last_report: Optional[TrainReport] = None
         self._last_state = None     # final TrainState of the last train()
         self._gens = None           # lazily calibrated §III generators
+        self._n_tensors = None      # lazily counted parameter-tree leaves
 
     # ------------------------------------------------------------ creation
     @classmethod
@@ -128,6 +133,18 @@ class Session:
     def model_bytes(self) -> float:
         """Checkpoint/update payload (fp32 params)."""
         return 4.0 * self.cfg.param_count()
+
+    def n_tensors(self) -> int:
+        """Variable count of the parameter tree — the per-tensor RPC term
+        of the PS capacity law (Table III), which compression does NOT
+        shrink (one RPC per variable regardless of payload)."""
+        if self._n_tensors is None:
+            import jax
+
+            from repro.models import api as model_api
+            self._n_tensors = len(jax.tree.leaves(
+                model_api.param_shapes(self.cfg)))
+        return self._n_tensors
 
     # ------------------------------------------------------ §III speed
     def _generators(self):
@@ -180,7 +197,8 @@ class Session:
              region: Optional[str] = None,
              seed: int = 0,
              provider: Optional[object] = None,
-             samples: int = 200
+             samples: int = 200,
+             n_ps: Optional[int] = None
              ) -> Tuple[LaunchPlan, List[LaunchPlan]]:
         """Revocation-aware (region, launch-hour) planning for this model.
 
@@ -189,12 +207,20 @@ class Session:
         (default: the session's, normally "gcp"). `samples` sets the
         Monte-Carlo draws per (region, hour) cell — every returned
         `LaunchPlan` carries the binomial `revocation_stderr` of its
-        E[revocations] estimate.
+        E[revocations] estimate. `n_ps` (optional) additionally caps the
+        cluster speed with the Fig 4 PS capacity model for this model's
+        payload under `run.grad_compression` — the §VI-B recalibration,
+        so a compressed plan sees the raised ceiling.
         """
         prov = self._provider(provider)
         # validate (gpu, region) BEFORE the MC sweep so a typo'd region
         # fails immediately instead of after seconds of discarded work
         self._check_fleet(gpu, region, prov)
+        ps = None
+        if n_ps is not None:
+            ps = PSBottleneckModel(self.model_bytes(), n_ps,
+                                   n_tensors=self.n_tensors(),
+                                   compression=self.run.grad_compression)
         best, plans = plan_launch(
             gpu, n_workers, self.predict_worker_speed(gpu, provider=prov),
             n_w=self.run.total_steps if steps is None else steps,
@@ -204,7 +230,7 @@ class Session:
             hours=hours, seed=seed, provider=prov, samples=samples,
             # the session's real model complexity, so plan() and predict()
             # agree on the Fig 10 replacement term for the same cell
-            model_gflops=self.model_gflops())
+            model_gflops=self.model_gflops(), ps=ps)
         if region is not None:
             plans = [p for p in plans if p.region == region]
             best = min(plans, key=lambda p: (p.expected_cost,
@@ -284,7 +310,13 @@ class Session:
         i_c = (self.run.checkpoint_interval if checkpoint_interval is None
                else checkpoint_interval)
         worker_speed = self.predict_worker_speed(gpu, provider=prov)
-        ps = PSBottleneckModel(self.model_bytes(), n_ps)
+        # the capacity ceiling reflects the run's wire scheme (§VI-B): a
+        # compressed payload raises the network term by 1/compression_ratio
+        # while the per-tensor RPC term stays — RPC-bound models (many
+        # small tensors) keep their ceiling
+        ps = PSBottleneckModel(self.model_bytes(), n_ps,
+                               n_tensors=self.n_tensors(),
+                               compression=self.run.grad_compression)
         workers = [WorkerSpec(gpu, worker_speed)] * n_workers
         sp = cluster_speed(workers, ps)
         hours = n_w / sp / 3600.0
@@ -304,6 +336,10 @@ class Session:
             model_gflops=self.model_gflops(),
             model_bytes=self.model_bytes(), worker_speed=worker_speed,
             cluster_speed=sp, ps_bottlenecked=ps.is_bottlenecked(workers),
+            ps_capacity=ps.capacity_steps_per_s(),
+            grad_compression=self.run.grad_compression,
+            payload_bytes=self.model_bytes()
+            * compression_ratio(self.run.grad_compression),
             checkpoint_seconds=t_c, provision_seconds=t_p,
             replacement_seconds=t_s,
             expected_revocations=expected_revocations(probs),
@@ -318,14 +354,50 @@ class Session:
               checkpoint_dir: Optional[str] = None,
               predicted_speed: Optional[float] = None,
               check_every: int = 10,
-              resume: bool = True) -> TrainReport:
+              resume: bool = True,
+              mode: str = "sync",
+              ps_model: Optional[PSBottleneckModel] = None,
+              workers: Optional[List[WorkerSpec]] = None,
+              worker_step_times: Optional[List[float]] = None) -> TrainReport:
         """Run the transient-aware elastic trainer; profiler + Controller
         observations stream onto `self.bus`.
 
+        `mode="sync"` (default) is the elastic synchronous runtime;
+        `mode="async_ps"` runs the §II asynchronous-PS emulation
+        (`core/ps_async.py`) over the same model and data — per-update
+        `async_step` events and a final `staleness` event (the staleness
+        histogram plus per-worker paces and realized update counts) land on the bus.
+
         `resume=True` restores from `checkpoint_dir` when a checkpoint
         exists (lease permitting), which is how a replacement chief
-        continues a run (pass a new `holder`).
+        continues a run (pass a new `holder`). `ps_model`/`workers` arm
+        the §VI-B mitigation loop: the Controller attributes deviations
+        to PS saturation and the trainer acts mid-run
+        (add a PS / enable compression) and re-derives its prediction.
         """
+        if mode == "async_ps":
+            # the §II emulation has no checkpointing, membership events or
+            # controller loop — reject sync-only arguments loudly rather
+            # than silently dropping e.g. a checkpoint_dir the caller is
+            # relying on
+            unsupported = {"events": events, "checkpoint_dir": checkpoint_dir,
+                           "predicted_speed": predicted_speed,
+                           "ps_model": ps_model, "workers": workers}
+            bad = sorted(k for k, v in unsupported.items() if v)
+            if bad:
+                raise ValueError(
+                    f"mode='async_ps' does not support: {', '.join(bad)} "
+                    "(no checkpointing/controller loop in the emulation)")
+            return self._train_async_ps(
+                steps, global_batch=global_batch, seq_len=seq_len,
+                members=members, worker_step_times=worker_step_times)
+        if mode != "sync":
+            raise ValueError(f"unknown train mode {mode!r}; "
+                             f"known: ('sync', 'async_ps')")
+        if worker_step_times:
+            raise ValueError("worker_step_times applies to "
+                             "mode='async_ps' only (sync pacing is "
+                             "measured, not configured)")
         steps = self.run.total_steps if steps is None else steps
         run = self.run
         if checkpoint_dir is not None:
@@ -342,7 +414,8 @@ class Session:
             self.cfg, run, loader,
             members=[Member(i) for i in range(members)], holder=holder,
             predicted_speed=predicted_speed,
-            on_event=lambda kind, payload: self.bus.emit(kind, **payload))
+            on_event=lambda kind, payload: self.bus.emit(kind, **payload),
+            ps_model=ps_model, workers=workers)
         self.trainer = trainer
         # NOTE: `run` (with the resolved checkpoint_dir) lives on the
         # trainer only — per-call overrides never mutate self.run
@@ -351,6 +424,62 @@ class Session:
         state, report = trainer.run_steps(state, steps, events=events,
                                           check_every=check_every)
         self._last_state = state
+        self.last_report = report
+        return report
+
+    def _train_async_ps(self, steps: Optional[int], *, global_batch: int,
+                        seq_len: int, members: int,
+                        worker_step_times: Optional[List[float]]
+                        ) -> TrainReport:
+        """§II async-PS emulation as a Session mode (the ROADMAP item).
+
+        Workers push gradients computed at stale parameter snapshots; pace
+        differences produce the staleness the paper studies. Events:
+        `async_step` per applied update, then one `staleness` event with
+        the histogram, per-worker paces and realized update counts.
+        """
+        import time as _time
+
+        import jax.numpy as jnp
+
+        from repro.core.ps_async import async_sgd
+        from repro.launch import steps as steps_mod
+        from repro.models import api as model_api
+
+        steps = self.run.total_steps if steps is None else steps
+        src = source_for_config(self.cfg, seq_len, seed=self.run.seed)
+        loader = ShardedLoader(src, global_batch)
+        params, _ = model_api.init(self.cfg)
+        # default pace spread mirrors the paper's K80-vs-V100 heterogeneity
+        paces = worker_step_times or [0.1 * (1 + i) for i in range(members)]
+
+        def loss_fn(p, batch):
+            return model_api.loss_fn(p, self.cfg, batch)
+
+        def data(worker, key):
+            batch_np = loader.next_global(1)
+            return ({k: jnp.asarray(v) for k, v in batch_np.items()},)
+
+        t0 = _time.monotonic()
+        final_params, trace = async_sgd(
+            loss_fn, params, data, paces, lr=self.run.lr,
+            total_updates=steps, seed=self.run.seed,
+            on_update=lambda info: self.bus.emit("async_step", **info))
+        # serve() after an async train must see the trained weights, just
+        # like the sync path
+        self._last_state = steps_mod.TrainState(
+            final_params, (), jnp.zeros((), jnp.int32))
+        self.bus.emit("staleness",
+                      hist=dict(sorted(trace.staleness_hist.items())),
+                      worker_updates=trace.worker_updates,
+                      worker_step_time=trace.worker_step_time,
+                      mode="async_ps")
+        report = TrainReport(
+            steps_run=trace.applied_updates,
+            final_loss=trace.losses[-1] if trace.losses else float("nan"),
+            losses=trace.losses, speed=None, epochs=1, checkpoints=0,
+            restores=0, detections=[],
+            wall_seconds=_time.monotonic() - t0)
         self.last_report = report
         return report
 

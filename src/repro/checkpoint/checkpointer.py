@@ -199,6 +199,15 @@ class Checkpointer:
             steps = self.all_steps()
             return steps[-1] if steps else None
 
+    def read_meta(self, step: Optional[int] = None) -> dict:
+        """The meta.json of a committed checkpoint (structure + user
+        metadata) without loading the array payload."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.root}")
+        with open(os.path.join(self.root, f"step_{step}", "meta.json")) as f:
+            return json.load(f)
+
     def restore(self, tree_like, step: Optional[int] = None
                 ) -> Tuple[Any, int]:
         step = step if step is not None else self.latest_step()

@@ -20,6 +20,7 @@ from repro.core.profiler import PerformanceProfiler
 class Action(enum.Enum):
     NONE = "none"
     ADD_PARAMETER_SERVER = "add_parameter_server"
+    ENABLE_COMPRESSION = "enable_compression"
     REPLACE_WORKER = "replace_worker"
     REQUEST_REPLACEMENT = "request_replacement"
 
@@ -60,15 +61,35 @@ class Controller:
         note = "under-performing worker(s) suspected"
         if ps_model is not None and workers is not None:
             if ps_model.is_bottlenecked(workers):
-                action = Action.ADD_PARAMETER_SERVER
-                note = ("aggregate worker speed exceeds PS capacity "
-                        f"({sum(w.speed for w in workers):.2f} > "
+                over = (f"({sum(w.speed for w in workers):.2f} > "
                         f"{ps_model.capacity_steps_per_s():.2f} steps/s)")
+                if ps_model.compression == "none":
+                    # §VI-B: shrinking the payload is free (no new server);
+                    # try it before provisioning more PS capacity
+                    action = Action.ENABLE_COMPRESSION
+                    note = ("aggregate worker speed exceeds PS capacity "
+                            f"{over}; compress the update payload")
+                else:
+                    action = Action.ADD_PARAMETER_SERVER
+                    note = ("aggregate worker speed exceeds PS capacity "
+                            f"{over} despite "
+                            f"{ps_model.compression} compression")
         det = Detection(True, measured, predicted_speed, dev, action, note)
         self.log.append(det)
         return det
 
     def mitigate_ps(self, ps_model: PSBottleneckModel) -> PSBottleneckModel:
-        """§VI-B mitigation: provision one more parameter server."""
-        return PSBottleneckModel(ps_model.model_bytes, ps_model.n_ps + 1,
-                                 ps_model.ps_bw)
+        """§VI-B mitigation: provision one more parameter server.
+
+        Rebuilt with `replace` so the per-tensor RPC term (`n_tensors`,
+        `rpc_per_tensor`) and the wire compression scheme survive the
+        mitigation — dropping them silently inflated capacity estimates
+        for RPC-bound models.
+        """
+        return dataclasses.replace(ps_model, n_ps=ps_model.n_ps + 1)
+
+    def mitigate_compression(self, ps_model: PSBottleneckModel,
+                             scheme: str = "int8") -> PSBottleneckModel:
+        """§VI-B mitigation: shrink the update payload — the capacity
+        model's network term scales by `compression_ratio(scheme)`."""
+        return dataclasses.replace(ps_model, compression=scheme)

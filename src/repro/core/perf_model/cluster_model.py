@@ -28,6 +28,8 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.dist.compression import compression_ratio
+
 PS_NET_BYTES_PER_S = 1.25e9   # 10 Gbps GCP NIC per parameter server
 PS_RPC_PER_TENSOR_S = 2.52e-4  # per-variable RPC+apply cost, calibrated so
 # ResNet-32 (97 tensors) saturates one PS at ~41 updates/s (Table III)
@@ -46,9 +48,14 @@ class PSBottleneckModel:
     ps_bw: float = PS_NET_BYTES_PER_S
     n_tensors: int = 0
     rpc_per_tensor: float = PS_RPC_PER_TENSOR_S
+    #: gradient-compression scheme on the wire (§VI-B): shrinks the network
+    #: term by `compression_ratio` but NOT the per-tensor RPC term — a
+    #: compressed push still issues one RPC per variable
+    compression: str = "none"
 
     def service_time_s(self) -> float:
-        net = 2.0 * self.model_bytes / self.ps_bw
+        net = (2.0 * self.model_bytes * compression_ratio(self.compression)
+               / self.ps_bw)
         rpc = self.rpc_per_tensor * self.n_tensors
         return max(net, rpc) / self.n_ps
 
@@ -112,10 +119,12 @@ class HeterogeneousPredictor:
     model_bytes: float
     n_ps: int = 1
     n_tensors: int = 0
+    compression: str = "none"
 
     def predict(self, counts: Dict[str, int]) -> float:
         workers = [WorkerSpec(g, self.speed_of[g])
                    for g, n in counts.items() for _ in range(n)]
         ps = PSBottleneckModel(self.model_bytes, self.n_ps,
-                               n_tensors=self.n_tensors)
+                               n_tensors=self.n_tensors,
+                               compression=self.compression)
         return cluster_speed(workers, ps)

@@ -69,5 +69,10 @@ class PerformanceProfiler:
         return float(arr.std() / max(arr.mean(), 1e-12))
 
     def step_time(self) -> Optional[float]:
+        """Seconds per step; `None` only when there is genuinely no data.
+        A measured speed of exactly 0.0 (a stalled run) is data — it maps
+        to an infinite step time, not to "no measurement"."""
         sp = self.speed()
-        return (1.0 / sp) if sp else None
+        if sp is None:
+            return None
+        return (1.0 / sp) if sp > 0 else float("inf")

@@ -45,16 +45,20 @@ class PSQueueResult:
 def ps_queue_sim(compute_times: Sequence[float], model_bytes: float,
                  n_ps: int = 1, ps_bw: float = PS_NET_BYTES_PER_S,
                  steps: int = 400, seed: int = 0,
-                 n_tensors: int = 0) -> PSQueueResult:
+                 n_tensors: int = 0,
+                 grad_compression: str = "none") -> PSQueueResult:
     """Workers with given per-step compute times sharing n_ps servers.
 
     Per-update service follows the calibrated PS law (cluster_model):
-    max(network, per-tensor RPC) / n_ps — variables are striped across PSes.
+    max(network, per-tensor RPC) / n_ps — variables are striped across
+    PSes. `grad_compression` shrinks the network term by
+    `compression_ratio` (§VI-B), exactly as `PSBottleneckModel` does.
     """
     from repro.core.perf_model.cluster_model import PSBottleneckModel
     n = len(compute_times)
     service = PSBottleneckModel(model_bytes, n_ps, ps_bw,
-                                n_tensors=n_tensors).service_time_s()
+                                n_tensors=n_tensors,
+                                compression=grad_compression).service_time_s()
     # Async semantics: a worker pushing to a FREE PS proceeds immediately
     # (apply/pull overlap its next compute); pushing to a BUSY PS waits for
     # the queue to drain (the Table III saturation regime).
@@ -90,17 +94,29 @@ class AsyncTrace:
     losses: List[float]
     applied_updates: int
     staleness_hist: Dict[int, int]
+    #: updates each worker actually pushed over the run (the realized
+    #: share of progress — fast workers dominate)
+    worker_updates: Dict[int, int] = dataclasses.field(default_factory=dict)
+    #: each worker's configured pace, echoed for the telemetry consumer
+    #: (this emulation has no PS contention, so pace IS the step time;
+    #: `ps_queue_sim` models the contended regime)
+    worker_step_time: Dict[int, float] = dataclasses.field(
+        default_factory=dict)
 
 
 def async_sgd(loss_fn: Callable, params, data_for_worker: Callable,
               worker_step_times: Sequence[float], lr: float = 0.1,
-              total_updates: int = 200, seed: int = 0) -> Tuple[object, AsyncTrace]:
+              total_updates: int = 200, seed: int = 0,
+              on_update: Optional[Callable[[dict], None]] = None
+              ) -> Tuple[object, AsyncTrace]:
     """Emulate async PS training: workers produce gradients computed at the
     params snapshot they last pulled; the PS applies them on arrival.
 
     worker_step_times sets each worker's pace; staleness emerges naturally
     from pace differences (fast workers update many times while a slow
-    worker's gradient is in flight).
+    worker's gradient is in flight). `on_update` (if given) observes every
+    applied update — `Session.train(mode="async_ps")` forwards it onto the
+    event bus.
     """
     grad_fn = jax.jit(jax.grad(loss_fn))
     n = len(worker_step_times)
@@ -114,6 +130,7 @@ def async_sgd(loss_fn: Callable, params, data_for_worker: Callable,
     version = 0
     losses = []
     stale_hist: Dict[int, int] = {}
+    pushes: Dict[int, int] = {w: 0 for w in range(n)}
     key = jax.random.PRNGKey(seed)
     while version < total_updates:
         t, w = heapq.heappop(q)
@@ -125,7 +142,13 @@ def async_sgd(loss_fn: Callable, params, data_for_worker: Callable,
         stale_hist[staleness] = stale_hist.get(staleness, 0) + 1
         params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
         version += 1
-        losses.append(float(loss_fn(params, *data_for_worker(w, sub))))
+        loss = float(loss_fn(params, *data_for_worker(w, sub)))
+        losses.append(loss)
+        pushes[w] += 1
+        if on_update is not None:
+            on_update({"update": version, "worker": w,
+                       "staleness": staleness, "loss": loss, "t": t})
         snaps[w] = (version, params)
         heapq.heappush(q, (t + worker_step_times[w], w))
-    return params, AsyncTrace(losses, version, stale_hist)
+    step_time = {w: float(st) for w, st in enumerate(worker_step_times)}
+    return params, AsyncTrace(losses, version, stale_hist, pushes, step_time)

@@ -31,8 +31,9 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.perf_model.cluster_model import (Eq4Inputs, WorkerSpec,
-                                                 cluster_speed,
+from repro.core.perf_model.cluster_model import (Eq4Inputs,
+                                                 PSBottleneckModel,
+                                                 WorkerSpec, cluster_speed,
                                                  predict_total_time)
 from repro.core.transient.replacement import ReplacementModel
 from repro.core.transient.revocation import RevocationSampler
@@ -100,8 +101,9 @@ def plan_launch(gpu: str, n_workers: int, worker_speed: float,
                 seed: int = 0,
                 provider: object = "gcp",
                 model_gflops: float = 1.54,
-                samples: int = 200) -> Tuple[LaunchPlan,
-                                             List[LaunchPlan]]:
+                samples: int = 200,
+                ps: Optional[PSBottleneckModel] = None
+                ) -> Tuple[LaunchPlan, List[LaunchPlan]]:
     """Scores all (region, hour) cells of one provider; returns (best, all).
 
     worker_speed: steps/s per worker for the target model (from the §III
@@ -109,6 +111,12 @@ def plan_launch(gpu: str, n_workers: int, worker_speed: float,
     replacement cold-start (default: the paper's ResNet-32); samples: MC
     draws per (region, hour) cell. Costing: transient hourly price x
     workers x expected time, replacement overhead included via Eq (4).
+
+    `ps` (optional) caps the cluster speed with the Fig 4 PS capacity
+    model, including its `compression` scheme — a plan made for a
+    compressed run (§VI-B) sees the raised capacity ceiling and the
+    correspondingly shorter exposure window. `ps=None` keeps the
+    uncapped Σ sp_i composition.
 
     The MC horizon is the Eq (4) *wall-clock* — compute plus checkpoint
     pauses, then one fixed-point iteration adding the revocation overhead
@@ -129,7 +137,7 @@ def plan_launch(gpu: str, n_workers: int, worker_speed: float,
     startup = StartupModel(seed + 1, prov)
     repl = ReplacementModel(seed + 2, prov)
     price = prov.price(gpu)
-    sp = cluster_speed([WorkerSpec(gpu, worker_speed)] * n_workers)
+    sp = cluster_speed([WorkerSpec(gpu, worker_speed)] * n_workers, ps)
     t_p = startup.mean_total(gpu)
     t_s = repl.cold_start_s(model_gflops)
 

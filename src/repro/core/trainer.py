@@ -26,7 +26,9 @@ import jax.numpy as jnp
 from repro.checkpoint import Checkpointer
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core import jit_cache
-from repro.core.controller import Controller, Detection
+from repro.core.controller import Action, Controller, Detection
+from repro.core.perf_model.cluster_model import (PSBottleneckModel,
+                                                 WorkerSpec, cluster_speed)
 from repro.core.profiler import PerformanceProfiler
 from repro.data.pipeline import ShardedLoader
 from repro.dist import sharding as sh
@@ -54,6 +56,8 @@ class TrainReport:
     restores: int
     detections: List[Detection]
     wall_seconds: float
+    #: §VI-B mitigations applied mid-run (see `apply_mitigation` payloads)
+    mitigations: List[dict] = dataclasses.field(default_factory=list)
 
 
 class TransientTrainer:
@@ -61,7 +65,12 @@ class TransientTrainer:
                  members: Optional[List[Member]] = None,
                  holder: str = "worker-0",
                  predicted_speed: Optional[float] = None,
-                 on_event: Optional[Callable[[str, dict], None]] = None):
+                 on_event: Optional[Callable[[str, dict], None]] = None,
+                 ps_model: Optional[PSBottleneckModel] = None,
+                 workers: Optional[List[WorkerSpec]] = None,
+                 auto_mitigate: bool = True,
+                 mitigation_scheme: str = "int8",
+                 max_mitigations: int = 8):
         self.cfg = cfg
         self.run = run
         self.loader = loader
@@ -73,14 +82,36 @@ class TransientTrainer:
         self.controller = Controller()
         self.ckpt = Checkpointer(run.checkpoint_dir, holder=holder)
         self.predicted_speed = predicted_speed
+        # §VI-B mitigation loop state: a PS capacity model + worker specs
+        # let the controller attribute a slowdown to PS saturation and let
+        # the trainer *act* on it mid-run (apply_mitigation)
+        if ps_model is not None and ps_model.compression != run.grad_compression:
+            ps_model = dataclasses.replace(ps_model,
+                                           compression=run.grad_compression)
+        self.ps_model = ps_model
+        self.workers = workers
+        self.auto_mitigate = auto_mitigate
+        self.mitigation_scheme = mitigation_scheme
+        # backstop against mitigation loops: adding a PS is self-limiting
+        # (the controller stops once capacity exceeds demand), but a badly
+        # mis-set prediction could otherwise re-fire on every check
+        self.max_mitigations = max_mitigations
+        self.restores = 0
+        self.mitigations: List[dict] = []
+        self._rebuild_step()
+        self.detections: List[Detection] = []
+
+    def _rebuild_step(self) -> None:
         # jit/lower artifacts are memoized across trainers/Sessions keyed
         # on (cfg, trace-relevant run fields, mesh, rules) — rebuilding a
-        # Session no longer re-traces an identical step (jit_cache)
+        # Session no longer re-traces an identical step (jit_cache); the
+        # key includes run.grad_compression, so the quantized step and the
+        # plain step cache separately
+        cfg, run = self.cfg, self.run
         self.train_step, self.opt, self._jit_step = jit_cache.cached(
             "train_step",
             (cfg, jit_cache.normalized_run(run), None, sh.MEGATRON_RULES),
             lambda: self._build_step(cfg, run))
-        self.detections: List[Detection] = []
 
     @staticmethod
     def _build_step(cfg: ModelConfig, run: RunConfig):
@@ -91,17 +122,44 @@ class TransientTrainer:
     def init_state(self, key=None) -> st.TrainState:
         params, _ = api.init(self.cfg, key)
         return st.TrainState(params, self.opt.init(params),
-                             jnp.zeros((), jnp.int32))
+                             jnp.zeros((), jnp.int32),
+                             st.init_residual(params, self.run))
 
     def restore_or_init(self, key=None) -> Tuple[st.TrainState, int]:
+        # a mid-run ENABLE_COMPRESSION must outlive the process: the
+        # scheme is run *state* recorded in the checkpoint metadata, so a
+        # restart whose config still says "none" resumes compressed (and
+        # keeps its error-feedback residual) instead of silently reverting
+        try:
+            saved = self.ckpt.read_meta().get("grad_compression", "none")
+        except (FileNotFoundError, ValueError):
+            saved = "none"
+        if saved != "none" and self.run.grad_compression == "none":
+            self.run = dataclasses.replace(self.run, grad_compression=saved)
+            self._rebuild_step()
+            if self.ps_model is not None:
+                self.ps_model = dataclasses.replace(self.ps_model,
+                                                    compression=saved)
         shapes = jax.eval_shape(self.init_state, key)
         try:
-            state, step = self.ckpt.restore(shapes)
+            try:
+                state, step = self.ckpt.restore(shapes)
+                residual = state.residual
+            except KeyError:
+                # checkpoint predates compression (no residual leaves):
+                # restore the legacy (params, opt, step) triple and start
+                # the error-feedback residual from zero
+                legacy = st.TrainState(shapes.params, shapes.opt, shapes.step)
+                state, step = self.ckpt.restore(legacy)
+                residual = jax.tree.map(
+                    lambda s: jnp.zeros(s.shape, s.dtype), shapes.residual)
             state = jax.tree.map(jnp.asarray, state)
+            residual = jax.tree.map(jnp.asarray, residual)
             self.loader.step = step
-            self._emit("restore", {"step": step})
+            self.restores += 1
+            self._emit("restore", {"step": step, "restores": self.restores})
             return st.TrainState(state.params, state.opt,
-                                 jnp.asarray(step, jnp.int32)), step
+                                 jnp.asarray(step, jnp.int32), residual), step
         except FileNotFoundError:
             return self.init_state(key), 0
 
@@ -112,7 +170,7 @@ class TransientTrainer:
         events = sorted(events or [], key=lambda e: e.step)
         ev_i = 0
         losses: List[float] = []
-        restores = checkpoints = 0
+        checkpoints = 0
         t0 = time.monotonic()
         start_step = int(state.step)
         for local in range(n_steps):
@@ -149,22 +207,38 @@ class TransientTrainer:
             state, metrics = self._jit_step(state, batch)
             loss = float(metrics["loss"])
             losses.append(loss)
-            self._emit("step", {"step": step, "loss": loss})
-            # 4. profile + detect
+            payload = {"step": step, "loss": loss}
+            if "payload_bytes" in metrics:
+                # §VI-B telemetry: the actual compressed wire size of this
+                # step's gradient push, not a config echo
+                payload["payload_bytes"] = float(metrics["payload_bytes"])
+                payload["grad_compression"] = self.run.grad_compression
+            self._emit("step", payload)
+            # 4. profile + detect (+ §VI-B mitigation)
             self.profiler.record(step, loss=loss)
             if self.predicted_speed and step % check_every == 0 and step > 0:
                 det = self.controller.check(self.profiler,
-                                            self.predicted_speed)
+                                            self.predicted_speed,
+                                            ps_model=self.ps_model,
+                                            workers=self.workers)
                 self.detections.append(det)
                 self._emit("detection", {"step": step,
                                          "bottleneck": det.bottleneck,
                                          "action": det.action.value,
                                          "deviation": det.deviation})
+                if self.auto_mitigate and det.action in (
+                        Action.ADD_PARAMETER_SERVER,
+                        Action.ENABLE_COMPRESSION) \
+                        and len(self.mitigations) < self.max_mitigations:
+                    state = self.apply_mitigation(det.action, state,
+                                                  step=step)
             # 5. checkpoint
             if self.run.checkpoint_interval and \
                     (step + 1) % self.run.checkpoint_interval == 0:
-                sizes = self.ckpt.save(step + 1, state,
-                                       metadata=self.loader.state())
+                sizes = self.ckpt.save(
+                    step + 1, state,
+                    metadata={**self.loader.state(),
+                              "grad_compression": self.run.grad_compression})
                 if sizes is not None:
                     checkpoints += 1
                     self._emit("checkpoint", {"step": step + 1,
@@ -173,6 +247,51 @@ class TransientTrainer:
             steps_run=n_steps, final_loss=losses[-1] if losses else float("nan"),
             losses=losses, speed=self.profiler.speed(),
             epochs=self.members.epoch_no + 1, checkpoints=checkpoints,
-            restores=restores, detections=self.detections,
-            wall_seconds=time.monotonic() - t0)
+            restores=self.restores, detections=self.detections,
+            wall_seconds=time.monotonic() - t0,
+            mitigations=self.mitigations)
         return state, report
+
+    # ------------------------------------------------------- §VI-B mitigate
+    def apply_mitigation(self, action: Action, state: st.TrainState,
+                         step: int = 0) -> st.TrainState:
+        """Act on a PS-bottleneck detection mid-run and re-derive the
+        prediction the controller compares against.
+
+        * ``ADD_PARAMETER_SERVER`` — provision one more PS in the capacity
+          model (Li et al.'s first mitigation lever);
+        * ``ENABLE_COMPRESSION`` — switch the train step to the quantized
+          §VI-B path: the run config flips to ``mitigation_scheme``, the
+          jitted step is rebuilt (cache-keyed on the scheme), a zero
+          error-feedback residual is attached to the state, and the PS
+          capacity model is recalibrated with ``compression_ratio``.
+
+        Either way ``predicted_speed`` is recomputed from the new capacity
+        so subsequent `Controller.check` calls measure against the
+        mitigated cluster, and a ``mitigation`` event is emitted.
+        """
+        if self.ps_model is None:
+            return state
+        if action is Action.ADD_PARAMETER_SERVER:
+            self.ps_model = self.controller.mitigate_ps(self.ps_model)
+        elif action is Action.ENABLE_COMPRESSION:
+            if self.run.grad_compression == "none":
+                self.run = dataclasses.replace(
+                    self.run, grad_compression=self.mitigation_scheme)
+                self._rebuild_step()
+                state = state._replace(
+                    residual=st.init_residual(state.params, self.run))
+            self.ps_model = self.controller.mitigate_compression(
+                self.ps_model, self.run.grad_compression)
+        else:
+            return state
+        if self.workers:
+            self.predicted_speed = cluster_speed(self.workers, self.ps_model)
+        record = {"step": step, "action": action.value,
+                  "n_ps": self.ps_model.n_ps,
+                  "grad_compression": self.run.grad_compression,
+                  "ps_capacity": self.ps_model.capacity_steps_per_s(),
+                  "predicted_speed": self.predicted_speed}
+        self.mitigations.append(record)
+        self._emit("mitigation", record)
+        return state

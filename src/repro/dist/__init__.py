@@ -15,5 +15,6 @@ Everything here is host-side metadata/bookkeeping; nothing allocates device
 memory at import time.
 """
 from repro.dist.elastic import ElasticMembership, Epoch, Member  # noqa: F401
-from repro.dist.compression import ErrorFeedback  # noqa: F401
+from repro.dist.compression import (ErrorFeedback,  # noqa: F401
+                                    compression_ratio, payload_bytes)
 from repro.dist import sharding  # noqa: F401

@@ -14,6 +14,7 @@ Schemes:
 """
 from __future__ import annotations
 
+import math
 from typing import Any, Dict, Tuple
 
 import jax
@@ -25,7 +26,18 @@ _BYTES_PER_VALUE = {"none": 4.0, "bf16": 2.0, "int8": 1.0}
 
 def compression_ratio(scheme: str) -> float:
     """Payload bytes per f32 gradient value (feeds the PS capacity model)."""
+    if scheme not in SCHEMES:
+        raise ValueError(f"unknown scheme {scheme!r}; known: {SCHEMES}")
     return _BYTES_PER_VALUE[scheme] / 4.0
+
+
+def payload_bytes(tree, scheme: str) -> float:
+    """Wire bytes of one compressed gradient push (the telemetry the
+    trainer emits per step, and the numerator of the PS network term)."""
+    n_values = sum(
+        int(math.prod(getattr(leaf, "shape", jnp.shape(leaf))))
+        for leaf in jax.tree.leaves(tree))
+    return n_values * _BYTES_PER_VALUE[scheme]
 
 
 def _quantize(x: jnp.ndarray, scheme: str) -> jnp.ndarray:

@@ -53,6 +53,14 @@ def add_train_args(p: argparse.ArgumentParser,
     p.add_argument("--revoke-at", type=int, default=0,
                    help="inject a revocation at this step (0 = none)")
     p.add_argument("--master-weights", action="store_true")
+    p.add_argument("--mode", default="sync", choices=("sync", "async_ps"),
+                   help="sync elastic runtime (default) or the §II "
+                        "asynchronous-PS emulation with staleness "
+                        "telemetry")
+    p.add_argument("--grad-compression", default="none",
+                   choices=("none", "bf16", "int8"),
+                   help="§VI-B wire compression with error feedback; "
+                        "also rescales the predicted PS capacity")
 
 
 def add_serve_args(p: argparse.ArgumentParser) -> None:
@@ -94,6 +102,7 @@ def run_config_from_args(args: argparse.Namespace) -> RunConfig:
         "optimizer": "optimizer", "lr": "lr",
         "total_steps": "steps", "checkpoint_interval": "checkpoint_interval",
         "master_weights": "master_weights", "seed": "seed",
+        "grad_compression": "grad_compression",
     }
     for field, attr in mapping.items():
         if field in fields and getattr(args, attr, None) is not None:

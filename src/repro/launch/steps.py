@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.dist import sharding as sh
+from repro.dist.compression import ErrorFeedback, payload_bytes
 from repro.models import api
 from repro.optim import clip_by_global_norm, cosine_warmup, make_optimizer
 
@@ -20,6 +21,10 @@ class TrainState(NamedTuple):
     params: Any
     opt: Any
     step: jnp.ndarray
+    # error-feedback residual tree for grad compression (§VI-B); the empty
+    # tuple is a leafless pytree, so uncompressed runs carry no extra state
+    # and pre-compression checkpoints/specs stay structurally identical
+    residual: Any = ()
 
 
 # ---------------------------------------------------------------------------
@@ -104,10 +109,21 @@ def _live_param_shapes(cfg: ModelConfig, run: RunConfig):
 
 def make_train_step(cfg: ModelConfig, run: RunConfig, mesh=None,
                     rules=sh.MEGATRON_RULES):
-    """Returns train_step(state, batch) -> (state, metrics)."""
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    With ``run.grad_compression`` in {"bf16", "int8"}, the clipped
+    gradients take the §VI-B wire round-trip before the optimizer sees
+    them: the error-feedback residual carried in ``state.residual`` is
+    folded in, the sum is quantize-decompressed, and the quantization
+    error becomes the next step's residual. Metrics then include
+    ``payload_bytes`` — the actual compressed push size the trainer
+    reports on the event bus.
+    """
     lr = cosine_warmup(run.lr, run.warmup_steps, run.total_steps)
     opt = make_optimizer(run.optimizer, lr, run.weight_decay,
                          master=run.master_weights)
+    ef = (ErrorFeedback(run.grad_compression)
+          if run.grad_compression != "none" else None)
 
     def train_step(state: TrainState, batch):
         def loss_of(p):
@@ -132,11 +148,17 @@ def make_train_step(cfg: ModelConfig, run: RunConfig, mesh=None,
             loss, grads = jax.value_and_grad(loss_of)(state.params)
 
         grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
-        new_params, new_opt = opt.update(grads, state.opt, state.params,
-                                         state.step)
+        residual = state.residual
         metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm,
                    "step": state.step}
-        return TrainState(new_params, new_opt, state.step + 1), metrics
+        if ef is not None:
+            grads, residual = ef.roundtrip(grads, residual)
+            metrics["payload_bytes"] = jnp.asarray(
+                payload_bytes(grads, run.grad_compression), jnp.float32)
+        new_params, new_opt = opt.update(grads, state.opt, state.params,
+                                         state.step)
+        return TrainState(new_params, new_opt, state.step + 1,
+                          residual), metrics
 
     return train_step, opt
 
@@ -155,6 +177,14 @@ def make_serve_step(cfg: ModelConfig):
     return serve_step
 
 
+def init_residual(params, run: RunConfig):
+    """Zero error-feedback residual when compression is on, else the empty
+    (leafless) tree."""
+    if run.grad_compression == "none":
+        return ()
+    return ErrorFeedback(run.grad_compression).init(params)
+
+
 def init_train_state(cfg: ModelConfig, run: RunConfig, key=None) -> TrainState:
     params, _ = api.init(cfg, key)
     if run.master_weights:
@@ -164,7 +194,8 @@ def init_train_state(cfg: ModelConfig, run: RunConfig, key=None) -> TrainState:
     lr = cosine_warmup(run.lr, run.warmup_steps, run.total_steps)
     opt = make_optimizer(run.optimizer, lr, run.weight_decay,
                          master=run.master_weights)
-    return TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+    return TrainState(params, opt.init(params), jnp.zeros((), jnp.int32),
+                      init_residual(params, run))
 
 
 def train_state_specs(cfg: ModelConfig, run: RunConfig):
@@ -174,8 +205,12 @@ def train_state_specs(cfg: ModelConfig, run: RunConfig):
     opt = make_optimizer(run.optimizer, lr, run.weight_decay,
                          master=run.master_weights)
     opt_shapes = jax.eval_shape(opt.init, pshapes)
+    res_shapes = ()
+    if run.grad_compression != "none":
+        res_shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), pshapes)
     return TrainState(pshapes, opt_shapes,
-                      jax.ShapeDtypeStruct((), jnp.int32))
+                      jax.ShapeDtypeStruct((), jnp.int32), res_shapes)
 
 
 def train_state_shardings(mesh, cfg: ModelConfig, run: RunConfig,
@@ -183,4 +218,6 @@ def train_state_shardings(mesh, cfg: ModelConfig, run: RunConfig,
     ps = param_shardings(mesh, cfg, rules)
     os_ = opt_shardings(mesh, cfg, run, ps, rules)
     scalar = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
-    return TrainState(ps, os_, scalar)
+    # the residual is params-shaped (f32), so it shards exactly like params
+    rs = ps if run.grad_compression != "none" else ()
+    return TrainState(ps, os_, scalar, rs)
