@@ -15,6 +15,12 @@ job uploads it as an artifact):
   a 4-worker V100 cluster, vs the pre-ensemble pattern of re-building a
   simulator per seed in a Python loop (what `benchmarks/cross_provider.py`
   did before the ensemble API).
+* **batched engine** — the lockstep array engine vs the per-trajectory
+  event loop at n=1024 trajectories of the same workload, both consuming
+  identical `FleetDraws` streams so the comparison is work-for-work. The
+  `speedup` here is the regression-gated metric (machine-normalized:
+  both engines run on the same box) with a 10x absolute floor — the
+  acceptance bar of the lockstep-engine PR.
 """
 from __future__ import annotations
 
@@ -49,6 +55,7 @@ N_WORKERS = 4
 SAMPLES = 200
 HOURS = [0, 3, 6, 9, 12, 15, 18, 21]
 ENSEMBLE_N = 64
+BATCHED_N = 1024
 
 
 # ------------------------------------------------- pinned scalar baseline
@@ -184,13 +191,45 @@ def bench_ensemble(n: int = ENSEMBLE_N) -> dict:
     }
 
 
+def bench_batched_engine(n: int = BATCHED_N) -> dict:
+    """Lockstep array engine vs the event-loop oracle, work-for-work
+    (shared `FleetDraws`), at ensemble scale — the regression-gated
+    hot path of the lockstep-engine PR."""
+    gens = calibrate_generators()
+    c_m = TABLE1_MODELS["resnet_32"]
+    sp = 1.0 / gens["v100"].step_time(c_m)
+    steps = 100_000
+
+    def mk():
+        workers = [SimWorker(i, "v100", "us-central1", sp)
+                   for i in range(N_WORKERS)]
+        return FleetSim(workers, model_gflops=c_m, model_bytes=1.87e6,
+                        step_speed_of=lambda g: sp,
+                        checkpoint_interval_steps=I_C, checkpoint_time_s=T_C,
+                        seed=0, price_of={"v100": 0.74})
+
+    batched_s = _best_of(lambda: mk().run_many(steps, n, max_hours=100.0,
+                                               engine="batched"))
+    event_s = _best_of(lambda: mk().run_many(steps, n, max_hours=100.0,
+                                             engine="event"), reps=2)
+    return {
+        "trajectories": n, "steps": steps,
+        "batched_s": round(batched_s, 4), "event_s": round(event_s, 4),
+        "traj_per_s": round(n / batched_s, 1),
+        "event_traj_per_s": round(n / event_s, 1),
+        "speedup": round(event_s / batched_s, 1),
+    }
+
+
 def run():
     grid = bench_planner_grid()
     ens = bench_ensemble()
+    eng = bench_batched_engine()
     payload = {
         "schema": 1,
         "planner_grid": grid,
         "ensemble": ens,
+        "batched_engine": eng,
     }
     OUT_PATH.write_text(json.dumps(payload, indent=2) + "\n")
     return [
@@ -206,6 +245,12 @@ def run():
                      f"{ens['batched_s']}s (loop: {ens['loop_s']}s); "
                      f"p50={ens['time_p50_s']}s p90={ens['time_p90_s']}s "
                      f"E[rev]={ens['revocations_mean']} (traj/s)")},
+        {"name": f"mc_speed/batched_engine/v100x4/n{eng['trajectories']}",
+         "value": eng["speedup"],
+         "derived": (f"{eng['trajectories']} trajectories: event "
+                     f"{eng['event_s']}s ({eng['event_traj_per_s']} traj/s)"
+                     f" -> batched {eng['batched_s']}s "
+                     f"({eng['traj_per_s']} traj/s) (speedup x)")},
     ]
 
 

@@ -2,19 +2,26 @@
 
 Compares a freshly measured BENCH_mc.json against the committed baseline
 (`benchmarks/BENCH_mc.baseline.json` — the generated root BENCH_mc.json
-itself stays gitignored) and fails on a >20% planner-grid slowdown (the
-PR 3 follow-up noted in ROADMAP.md). CI runners differ wildly in absolute
-speed, so the gated metric is the *relative* one each run measures
-against its own pinned scalar baseline — `planner_grid.speedup` (batched
-vs. in-run scalar): if the batched planner regresses, its speedup over
-the frozen scalar loop drops on any machine. Absolute `batched_s` numbers
-are reported for context but never gated.
+itself stays gitignored) and fails on a >20% slowdown of either gated
+metric. CI runners differ wildly in absolute speed, so both gated
+metrics are *relative* ones each run measures on its own box:
+
+* `planner_grid.speedup` — batched `plan_launch` vs. the in-run pinned
+  scalar loop (the PR 3 follow-up noted in ROADMAP.md);
+* `batched_engine.speedup` — the lockstep ensemble engine vs. the
+  event-loop oracle at n=1024 trajectories, which additionally must
+  stay above an absolute floor (default 10x, the lockstep-engine PR's
+  acceptance bar).
+
+Absolute `batched_s` numbers are reported for context but never gated.
 
     python scripts/check_bench_regression.py [--max-slowdown 0.2] \
+        [--min-engine-speedup 10.0] \
         [--baseline benchmarks/BENCH_mc.baseline.json] \
         [--current BENCH_mc.json]
 
-Exit nonzero when current speedup < (1 - max_slowdown) * baseline speedup.
+Exit nonzero when a current speedup < (1 - max_slowdown) * its baseline,
+or the engine speedup < the absolute floor.
 """
 from __future__ import annotations
 
@@ -30,7 +37,8 @@ def _load(path: str) -> dict:
     return json.loads(pathlib.Path(path).read_text(encoding="utf-8"))
 
 
-def check(baseline: dict, current: dict, max_slowdown: float) -> list:
+def check(baseline: dict, current: dict, max_slowdown: float,
+          min_engine_speedup: float = 10.0) -> list:
     errors = []
     base_grid = baseline.get("planner_grid", {})
     cur_grid = current.get("planner_grid", {})
@@ -48,6 +56,24 @@ def check(baseline: dict, current: dict, max_slowdown: float) -> list:
             f"planner-grid regression: speedup {cur_speedup}x fell below "
             f"{floor:.1f}x (= {1 - max_slowdown:.0%} of the committed "
             f"{base_speedup}x baseline)")
+    base_eng = baseline.get("batched_engine", {}).get("speedup")
+    cur_eng = current.get("batched_engine", {}).get("speedup")
+    if base_eng is None or cur_eng is None:
+        errors.append(
+            "batched_engine.speedup missing from baseline or current")
+    else:
+        eng_floor = max((1.0 - max_slowdown) * base_eng,
+                        min_engine_speedup)
+        print(f"batched_engine: baseline speedup {base_eng}x, current "
+              f"{cur_eng}x "
+              f"({current['batched_engine'].get('traj_per_s')} traj/s); "
+              f"floor {eng_floor:.1f}x")
+        if cur_eng < eng_floor:
+            errors.append(
+                f"batched-engine regression: speedup {cur_eng}x fell "
+                f"below {eng_floor:.1f}x (max of {1 - max_slowdown:.0%} "
+                f"of the committed {base_eng}x baseline and the "
+                f"{min_engine_speedup}x absolute floor)")
     ens_b = baseline.get("ensemble", {}).get("traj_per_s")
     ens_c = current.get("ensemble", {}).get("traj_per_s")
     if ens_b and ens_c:  # informational only: absolute, machine-dependent
@@ -65,9 +91,12 @@ def main(argv=None) -> int:
                     help="freshly measured BENCH_mc.json")
     ap.add_argument("--max-slowdown", type=float, default=0.2,
                     help="allowed fractional speedup loss (default 0.2)")
+    ap.add_argument("--min-engine-speedup", type=float, default=10.0,
+                    help="absolute batched-vs-event floor at n=1024 "
+                         "(default 10.0)")
     args = ap.parse_args(argv)
     errors = check(_load(args.baseline), _load(args.current),
-                   args.max_slowdown)
+                   args.max_slowdown, args.min_engine_speedup)
     for e in errors:
         print(f"FAIL: {e}", file=sys.stderr)
     if not errors:

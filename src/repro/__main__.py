@@ -50,10 +50,28 @@ def build_parser() -> argparse.ArgumentParser:
         if name == "plan":
             q.add_argument("--samples", type=int, default=200,
                            help="Monte-Carlo draws per (region, hour) cell")
+            q.add_argument("--score", default="eq4",
+                           choices=("eq4", "sim"),
+                           help="cell estimator: Eq (4) point estimate "
+                                "(default) or a full fleet-simulation "
+                                "ensemble per cell with time/cost "
+                                "percentiles")
+            q.add_argument("--engine", default="batched",
+                           choices=("batched", "event"),
+                           help="trajectory stepper for --score sim "
+                                "(docs/performance.md)")
+            # planning is uncapped unless the user asks for the Fig 4 PS
+            # model (--score sim always applies it, with 1 PS by default)
+            q.set_defaults(n_ps=None)
         elif name == "simulate":
             q.add_argument("--samples", type=int, default=1,
                            help="trajectories; >1 reports the p50/p90/mean "
                                 "ensemble summary (SimStats)")
+            q.add_argument("--engine", default="batched",
+                           choices=("batched", "event"),
+                           help="ensemble stepper: lockstep array engine "
+                                "(default) or the per-trajectory event "
+                                "loop (docs/performance.md)")
 
     b = sub.add_parser("bench", help="paper table/figure benchmark driver")
     b.add_argument("--only", default="",
@@ -128,17 +146,25 @@ def _cmd_plan(args) -> int:
                                steps=args.steps,
                                checkpoint_interval=args.checkpoint_interval,
                                region=args.region, seed=args.seed,
-                               provider=args.provider, samples=args.samples)
+                               provider=args.provider, samples=args.samples,
+                               score=args.score, engine=args.engine,
+                               n_ps=args.n_ps)
     where = args.region or "all regions"
+    what = ("simulated trajectories" if args.score == "sim" else "samples")
     print(f"arch={session.arch} provider={args.provider} gpu={args.gpu} "
           f"workers={args.workers} "
           f"({where}): scored {len(plans)} (region, hour) cells "
-          f"x {args.samples} samples")
+          f"x {args.samples} {what} [score={args.score}]")
     print(f"best: {best.region} @ {best.launch_hour:02d}h  "
           f"E[revocations]={best.expected_revocations:.2f}"
           f"±{best.revocation_stderr:.2f}  "
           f"E[time]={best.expected_time_s:.0f}s  "
           f"E[cost]=${best.expected_cost:.2f}")
+    if args.score == "sim":
+        print(f"      time p50={best.time_p50_s:.0f}s "
+              f"p90={best.time_p90_s:.0f}s  "
+              f"cost p50=${best.cost_p50:.2f} p90=${best.cost_p90:.2f}  "
+              f"finished={best.finished}/{best.samples}")
     return 0
 
 
@@ -148,7 +174,8 @@ def _cmd_simulate(args) -> int:
                            region=args.region, steps=args.steps,
                            checkpoint_interval=args.checkpoint_interval,
                            n_ps=args.n_ps, seed=args.seed,
-                           provider=args.provider, samples=args.samples)
+                           provider=args.provider, samples=args.samples,
+                           engine=args.engine)
     if args.samples > 1:
         st = res.stats
         print(f"arch={session.arch} {args.workers}x{args.gpu} on "

@@ -198,7 +198,9 @@ class Session:
              seed: int = 0,
              provider: Optional[object] = None,
              samples: int = 200,
-             n_ps: Optional[int] = None
+             n_ps: Optional[int] = None,
+             score: str = "eq4",
+             engine: str = "batched"
              ) -> Tuple[LaunchPlan, List[LaunchPlan]]:
         """Revocation-aware (region, launch-hour) planning for this model.
 
@@ -211,14 +213,26 @@ class Session:
         cluster speed with the Fig 4 PS capacity model for this model's
         payload under `run.grad_compression` — the §VI-B recalibration,
         so a compressed plan sees the raised ceiling.
+
+        `score="sim"` replaces the Eq (4) point estimate with a full
+        fleet-simulation ensemble per cell (`samples` trajectories on
+        the lockstep `engine`), so every plan also carries realized
+        time/cost percentiles and the `finished` censoring count —
+        simulation-backed planning instead of the closed form alone.
+        A sim-scored sweep ALWAYS simulates under the Fig 4 PS capacity
+        for this model (defaulting to one PS when `n_ps` is not given),
+        matching what `simulate()`/`predict()` would report for the
+        chosen cell; the eq4 score keeps its historic uncapped Σ sp_i
+        composition unless `n_ps` is passed.
         """
         prov = self._provider(provider)
         # validate (gpu, region) BEFORE the MC sweep so a typo'd region
         # fails immediately instead of after seconds of discarded work
         self._check_fleet(gpu, region, prov)
         ps = None
-        if n_ps is not None:
-            ps = PSBottleneckModel(self.model_bytes(), n_ps,
+        if n_ps is not None or score == "sim":
+            ps = PSBottleneckModel(self.model_bytes(),
+                                   1 if n_ps is None else n_ps,
                                    n_tensors=self.n_tensors(),
                                    compression=self.run.grad_compression)
         best, plans = plan_launch(
@@ -230,11 +244,11 @@ class Session:
             hours=hours, seed=seed, provider=prov, samples=samples,
             # the session's real model complexity, so plan() and predict()
             # agree on the Fig 10 replacement term for the same cell
-            model_gflops=self.model_gflops(), ps=ps)
-        if region is not None:
-            plans = [p for p in plans if p.region == region]
-            best = min(plans, key=lambda p: (p.expected_cost,
-                                             p.expected_time_s))
+            model_gflops=self.model_gflops(), ps=ps,
+            score=score, engine=engine, model_bytes=self.model_bytes(),
+            # constrain BEFORE scoring: under score="sim" every discarded
+            # cell would have cost a full ensemble
+            region=region)
         return best, plans
 
     # ------------------------------------------------- §VI-A fleet sim
@@ -248,7 +262,8 @@ class Session:
                  max_hours: float = 48.0,
                  provider: Optional[object] = None,
                  start_hour: float = 0.0,
-                 samples: int = 1):
+                 samples: int = 1,
+                 engine: str = "batched"):
         """Discrete-event simulation on a transient cluster.
 
         Either a homogeneous (`n_workers` x `gpu`) cluster or an explicit
@@ -258,9 +273,17 @@ class Session:
 
         `samples=1` (default) runs one trajectory and returns a
         `SimResult`, bit-identical to the pre-ensemble behavior for a
-        fixed seed. `samples>1` runs a `FleetSim.run_many` ensemble with
-        pre-drawn batched lifetimes and returns a `FleetEnsemble` whose
-        `.stats` is the p50/p90/mean `SimStats` summary.
+        fixed seed. `samples>1` runs a `FleetSim.run_many` ensemble and
+        returns a `FleetEnsemble` whose `.stats` is the p50/p90/mean
+        `SimStats` summary; `engine` picks the trajectory stepper —
+        "batched" (default) is the lockstep array engine, "event" the
+        per-trajectory discrete-event loop kept as the parity oracle
+        (docs/performance.md has the selection guide).
+
+        The simulated PS capacity uses this model's variable count and
+        `run.grad_compression`, exactly like `Session.predict` — so
+        predicted-vs-simulated error (§VI-A) stays meaningful for
+        compressed runs.
         """
         prov = self._provider(provider)
         region = region or prov.default_region
@@ -286,10 +309,12 @@ class Session:
             step_speed_of=lambda g: 1.0 / gens[g].step_time(c_m),
             checkpoint_interval_steps=i_c, checkpoint_time_s=t_c, n_ps=n_ps,
             seed=seed, replace=replace, handover=handover,
-            price_of={g: prov.price(g) for g in counts}, provider=prov)
+            price_of={g: prov.price(g) for g in counts}, provider=prov,
+            n_tensors=self.n_tensors(),
+            grad_compression=self.run.grad_compression)
         if samples > 1:
             return sim.run_many(n_steps, samples, max_hours=max_hours,
-                                start_hour=start_hour)
+                                start_hour=start_hour, engine=engine)
         return sim.run(n_steps, max_hours=max_hours, start_hour=start_hour)
 
     # ------------------------------------------------ Eq (4)/(5) predict

@@ -45,11 +45,14 @@ def _fit_dual(K: np.ndarray, y: np.ndarray, C: float, eps: float,
     n = len(y)
     beta = np.zeros(n)
     f = np.zeros(n)            # K @ beta, maintained incrementally
-    diag = np.maximum(np.diag(K).copy(), 1e-12)
+    # kernel matrices are symmetric, so the contiguous row K[i] stands in
+    # for the strided column K[:, i] the update needs
+    kdiag = np.diag(K)
+    diag = np.maximum(kdiag.copy(), 1e-12)
     for _ in range(passes):
         max_delta = 0.0
         for i in range(n):
-            r = y[i] - (f[i] - K[i, i] * beta[i])   # residual excluding i
+            r = y[i] - (f[i] - kdiag[i] * beta[i])  # residual excluding i
             # soft-threshold on epsilon, then box clip
             if r > eps:
                 b_new = (r - eps) / diag[i]
@@ -60,7 +63,7 @@ def _fit_dual(K: np.ndarray, y: np.ndarray, C: float, eps: float,
             b_new = min(C, max(-C, b_new))
             d = b_new - beta[i]
             if d != 0.0:
-                f += K[:, i] * d
+                f += K[i] * d
                 beta[i] = b_new
                 max_delta = max(max_delta, abs(d))
         if max_delta < tol:
@@ -126,7 +129,13 @@ class SVR:
 def grid_search_svr(X, y, kernel: str = "rbf", k: int = 5, seed: int = 0,
                     penalties=None, epsilons=None) -> Tuple[SVR, dict]:
     """The paper's grid search: p ∈ [10,100] step 10, ε ∈ [0.01,0.1] step
-    0.01, k-fold CV. Kernel matrices are shared across the grid."""
+    0.01, k-fold CV.
+
+    The kernel is evaluated ONCE on the full dataset and every fold's
+    train/test blocks are `np.ix_` selections into it — no per-fold
+    kernel re-evaluation, and nothing kernel-shaped inside the (C, ε)
+    double loop.
+    """
     X = np.atleast_2d(np.asarray(X, float))
     if X.shape[0] != len(y):
         X = X.T
@@ -137,12 +146,12 @@ def grid_search_svr(X, y, kernel: str = "rbf", k: int = 5, seed: int = 0,
 
     proto = SVR(kernel=kernel)
     kfn = proto._kfn(X.shape[1], float(X.var()))
-    # per-fold precomputed matrices
+    K_full = kfn(X, X)                      # one kernel evaluation total
     cache = []
     for i in range(k):
         te = folds[i]
         tr = np.concatenate([folds[j] for j in range(k) if j != i])
-        cache.append((K_tr := kfn(X[tr], X[tr]), kfn(X[te], X[tr]),
+        cache.append((K_full[np.ix_(tr, tr)], K_full[np.ix_(te, tr)],
                       y[tr], y[te]))
 
     best = None

@@ -50,10 +50,22 @@ class LaunchPlan:
     expected_time_s: float
     expected_cost: float
     provider: str = "gcp"
-    #: binomial standard error of `expected_revocations` (same units)
+    #: standard error of `expected_revocations` (same units): binomial
+    #: under score="eq4", the trajectory-sample SEM under score="sim"
     revocation_stderr: float = 0.0
     #: Monte-Carlo sample count behind the estimate
     samples: int = 0
+    #: how the cell was scored: "eq4" (Eq (4) point estimate around a
+    #: lifetime MC) or "sim" (full batched fleet-simulation ensemble)
+    score: str = "eq4"
+    #: distribution summary, populated under score="sim" (zeros otherwise)
+    time_p50_s: float = 0.0
+    time_p90_s: float = 0.0
+    cost_p50: float = 0.0
+    cost_p90: float = 0.0
+    #: trajectories that completed every step (score="sim"); if it is
+    #: below `samples` the cell's time/cost understate the truth
+    finished: int = 0
 
 
 def expected_revocations_mc(region: str, gpu: str, start_hour: float,
@@ -102,33 +114,71 @@ def plan_launch(gpu: str, n_workers: int, worker_speed: float,
                 provider: object = "gcp",
                 model_gflops: float = 1.54,
                 samples: int = 200,
-                ps: Optional[PSBottleneckModel] = None
+                ps: Optional[PSBottleneckModel] = None,
+                score: str = "eq4",
+                engine: str = "batched",
+                model_bytes: float = 1.87e6,
+                replace: bool = True,
+                handover: bool = True,
+                max_sim_hours: Optional[float] = None,
+                region: Optional[str] = None
                 ) -> Tuple[LaunchPlan, List[LaunchPlan]]:
     """Scores all (region, hour) cells of one provider; returns (best, all).
 
     worker_speed: steps/s per worker for the target model (from the §III
     predictors); model_gflops: its complexity C_m, which sets the Fig 10
     replacement cold-start (default: the paper's ResNet-32); samples: MC
-    draws per (region, hour) cell. Costing: transient hourly price x
-    workers x expected time, replacement overhead included via Eq (4).
+    draws (score="eq4") or simulated trajectories (score="sim") per
+    (region, hour) cell. Costing: transient hourly price x workers x
+    expected time, replacement overhead included via Eq (4) — or, under
+    score="sim", the ensemble's realized GPU-hour cost.
+
+    `score` picks the estimator behind each cell:
+
+    * ``"eq4"`` (default) — the Eq (4) point estimate around one batched
+      lifetime draw (+ binomial stderr), exactly the historic planner.
+    * ``"sim"`` — a full `FleetSim.run_many` ensemble per cell on the
+      lockstep `engine` (`"batched"`/`"event"`): every plan carries
+      realized time/cost percentiles (`time_p50_s`/`time_p90_s`/
+      `cost_p50`/`cost_p90`), the trajectory-sample revocation stderr and
+      the `finished` censoring count, so the chosen cell reflects the
+      simulated dynamics (chief loss, replacement chains, diurnal join
+      hours) instead of the Eq (4) closed form alone. `model_bytes`,
+      `replace`, `handover` and `max_sim_hours` (default: 6x the
+      no-revocation Eq (4) wall-clock, at least 48 h) shape that
+      simulation; cells share the simulation seed, so they are compared
+      under common random numbers like the eq4 grid.
 
     `ps` (optional) caps the cluster speed with the Fig 4 PS capacity
     model, including its `compression` scheme — a plan made for a
     compressed run (§VI-B) sees the raised capacity ceiling and the
-    correspondingly shorter exposure window. `ps=None` keeps the
+    correspondingly shorter exposure window; under score="sim" the same
+    recalibration is forwarded to the simulator. `ps=None` keeps the
     uncapped Σ sp_i composition.
 
-    The MC horizon is the Eq (4) *wall-clock* — compute plus checkpoint
-    pauses, then one fixed-point iteration adding the revocation overhead
-    itself — not the compute-only time: a checkpoint-heavy run stays
-    exposed to the market for every pause too, and the lifetimes are drawn
-    once per cell so the refined horizon reuses the same draws.
+    The eq4 MC horizon is the Eq (4) *wall-clock* — compute plus
+    checkpoint pauses, then one fixed-point iteration adding the
+    revocation overhead itself — not the compute-only time: a
+    checkpoint-heavy run stays exposed to the market for every pause too,
+    and the lifetimes are drawn once per cell so the refined horizon
+    reuses the same draws.
+
+    `region` (optional) constrains the sweep to one region BEFORE any
+    cell is scored — under score="sim" every discarded cell would have
+    cost a full ensemble.
     """
     from repro.providers import get_provider
     if samples < 1:
         raise ValueError(f"need at least one MC sample, got {samples}")
+    if score not in ("eq4", "sim"):
+        raise ValueError(f"unknown score {score!r}; known: ('eq4', 'sim')")
     prov = get_provider(provider)
-    prov.check_gpu_offered(gpu)
+    if region is not None:
+        prov.check_offered(region, gpu)
+        regions = [region]
+    else:
+        prov.check_gpu_offered(gpu)
+        regions = prov.regions_offering(gpu)
     hours = hours if hours is not None else list(range(0, 24, 3))
     if i_c <= 0:  # no checkpointing: zero pauses, Eq (4) stays defined
         i_c, t_c = n_w, 0.0
@@ -147,9 +197,18 @@ def plan_launch(gpu: str, n_workers: int, worker_speed: float,
             n_w, i_c, t_c, t_p, t_s, [n_r / n_workers] * n_workers))
 
     base_s = eq4(0.0)                       # Eq (4) without revocations
+    if score == "sim":
+        plans = _sim_scored_grid(
+            gpu, n_workers, worker_speed, n_w, i_c, t_c, hours, seed, prov,
+            model_gflops, samples, ps, engine, model_bytes, replace,
+            handover,
+            max_sim_hours if max_sim_hours is not None
+            else max(48.0, 6.0 * base_s / 3600.0), regions)
+        best = min(plans, key=lambda p: (p.expected_cost, p.expected_time_s))
+        return best, plans
     horizon0 = min(base_s / 3600.0, prov.max_lifetime_hours)
     plans: List[LaunchPlan] = []
-    for region in prov.regions_offering(gpu):
+    for region in regions:
         for h in hours:
             # one batched draw per cell — same seed per cell, so cells
             # are compared under common random numbers (as the pre-
@@ -172,3 +231,45 @@ def plan_launch(gpu: str, n_workers: int, worker_speed: float,
                 samples=samples))
     best = min(plans, key=lambda p: (p.expected_cost, p.expected_time_s))
     return best, plans
+
+
+def _sim_scored_grid(gpu, n_workers, worker_speed, n_w, i_c, t_c, hours,
+                     seed, prov, model_gflops, samples, ps, engine,
+                     model_bytes, replace, handover, max_sim_hours,
+                     regions) -> List[LaunchPlan]:
+    """One batched fleet-simulation ensemble per (region, hour) cell —
+    the simulation-backed §V-C planner the lockstep engine makes routine
+    (10k+ trajectories per sweep stay sub-second)."""
+    from repro.core.transient.fleet import FleetSim, SimWorker
+    plans: List[LaunchPlan] = []
+    for region in regions:
+        for h in hours:
+            workers = [SimWorker(i, gpu, region, worker_speed)
+                       for i in range(n_workers)]
+            sim = FleetSim(
+                workers, model_gflops=model_gflops,
+                model_bytes=ps.model_bytes if ps is not None
+                else model_bytes,
+                step_speed_of=lambda g: worker_speed,
+                checkpoint_interval_steps=i_c, checkpoint_time_s=t_c,
+                n_ps=ps.n_ps if ps is not None else 1,
+                n_tensors=ps.n_tensors if ps is not None else 0,
+                grad_compression=ps.compression if ps is not None
+                else "none",
+                seed=seed, replace=replace, handover=handover,
+                price_of={gpu: prov.price(gpu)}, provider=prov)
+            ens = sim.run_many(n_w, samples, max_hours=max_sim_hours,
+                               start_hour=float(h), engine=engine)
+            st = ens.stats
+            plans.append(LaunchPlan(
+                region, gpu, h, n_workers,
+                expected_revocations=st.revocations_mean,
+                expected_time_s=st.time_mean_s,
+                expected_cost=st.cost_mean,
+                provider=prov.name,
+                revocation_stderr=st.revocations_stderr,
+                samples=samples, score="sim",
+                time_p50_s=st.time_p50_s, time_p90_s=st.time_p90_s,
+                cost_p50=st.cost_p50, cost_p90=st.cost_p90,
+                finished=st.finished))
+    return plans

@@ -82,6 +82,7 @@ class SimStats:
     revocations_mean: float
     replacements_mean: float
     finished: int = 0
+    revocations_stderr: float = 0.0
 
     @classmethod
     def from_results(cls, results: List["SimResult"],
@@ -105,7 +106,7 @@ class SimStats:
                    c50, c90, cm, sem(costs),
                    r50, r90, rm,
                    float(np.mean([r.replacements for r in results])),
-                   finished=finished)
+                   finished=finished, revocations_stderr=sem(revs))
 
 
 @dataclasses.dataclass
@@ -130,6 +131,13 @@ class FleetSim:
     enough to flush a checkpoint (`graceful_checkpoint_on_warning` and
     `warning_seconds >= T_c`, e.g. AWS's 2-minute notice), a revoked chief
     checkpoints before dying, so stock identity-reuse loses no steps.
+
+    `n_tensors` / `grad_compression` feed the Fig 4 PS capacity term the
+    same way `Session.predict` does (§VI-B): the network share of the PS
+    service time shrinks by `compression_ratio(scheme)` while the
+    per-tensor RPC share stays, so predicted-vs-simulated error is
+    meaningful for compressed runs too. Defaults reproduce the historic
+    uncompressed, RPC-free capacity model.
     """
 
     def __init__(self, workers: List[SimWorker], *, model_gflops: float,
@@ -137,7 +145,8 @@ class FleetSim:
                  checkpoint_interval_steps: int, checkpoint_time_s: float,
                  n_ps: int = 1, seed: int = 0, replace: bool = True,
                  handover: bool = True, price_of: Optional[Dict] = None,
-                 provider: object = "gcp"):
+                 provider: object = "gcp", n_tensors: int = 0,
+                 grad_compression: str = "none"):
         from repro.providers import get_provider
         self.workers = {w.wid: w for w in workers}
         if workers:
@@ -152,6 +161,8 @@ class FleetSim:
         self.i_c = checkpoint_interval_steps
         self.t_c = checkpoint_time_s
         self.n_ps = n_ps
+        self.n_tensors = n_tensors
+        self.grad_compression = grad_compression
         self.replace = replace
         self.handover = handover
         self.provider = get_provider(provider)
@@ -174,26 +185,39 @@ class FleetSim:
                         checkpoint_time_s=self.t_c, n_ps=self.n_ps,
                         seed=seed, replace=self.replace,
                         handover=self.handover, price_of=self.price_of,
-                        provider=self.provider)
+                        provider=self.provider, n_tensors=self.n_tensors,
+                        grad_compression=self.grad_compression)
 
     def _cluster_speed(self) -> float:
         alive = [WorkerSpec(w.gpu, w.speed)
                  for w in self.workers.values() if w.alive]
         if not alive:
             return 0.0
-        ps = PSBottleneckModel(self.model_bytes, self.n_ps)
+        ps = PSBottleneckModel(self.model_bytes, self.n_ps,
+                               n_tensors=self.n_tensors,
+                               compression=self.grad_compression)
         return cluster_speed(alive, ps)
 
     def run(self, total_steps: int, max_hours: float = 48.0,
             start_hour: float = 0.0, *,
-            initial_lifetimes: Optional[Sequence[float]] = None) -> SimResult:
+            initial_lifetimes: Optional[Sequence[float]] = None,
+            draws: Optional[object] = None, traj: int = 0) -> SimResult:
         """`start_hour`: local launch hour, so diurnal lifetime laws (GCP
         Fig 9, AWS price signal) see the planned launch cell.
         `initial_lifetimes`: pre-drawn lifetimes (hours, launch-roster
         order, np.inf = survived) — `run_many` injects one batched draw
-        per trajectory; the default draws from `self.rev` as before."""
+        per trajectory; the default draws from `self.rev` as before.
+        `draws` (a `fleet_batched.FleetDraws`) + `traj` switch every
+        replacement-chain draw (startup, cold start, join lifetime) onto
+        the counter-based per-(trajectory, slot, generation) streams the
+        batched engine consumes, making this event loop the exact parity
+        oracle for `run_many(engine="batched")`; the default `None`
+        keeps the historic sequential streams bit-for-bit."""
         q: List[FleetEvent] = []
         next_wid = max(self.workers) + 1
+        # wid -> (roster slot, generation) for the shared-draws contract
+        slot_of: Dict[int, Tuple[int, int]] = {
+            w.wid: (idx, 0) for idx, w in enumerate(self.workers.values())}
         # schedule revocations
         for idx, w in enumerate(self.workers.values()):
             lt = (float(initial_lifetimes[idx])
@@ -294,9 +318,16 @@ class FleetSim:
                             events.append(
                                 (t, f"chief lost: recompute {lost_now:.0f} steps"))
                     if self.replace:
-                        su = self.startup.sample(w.gpu, after_revocation=True)
-                        cold = self.repl.sample(self.model_gflops, cold=True)
-                        ready = t + su["total"] + cold
+                        slot, gen = slot_of[w.wid]
+                        if draws is not None:
+                            delay = draws.replacement_delay(
+                                traj, slot, gen + 1)
+                        else:
+                            su = self.startup.sample(w.gpu,
+                                                     after_revocation=True)
+                            delay = su["total"] + self.repl.sample(
+                                self.model_gflops, cold=True)
+                        ready = t + delay
                         # stock mode (Fig 11): the replacement inherits the
                         # revoked chief's identity, so later chief
                         # revocations keep costing recompute; with handover
@@ -304,7 +335,7 @@ class FleetSim:
                         heapq.heappush(q, FleetEvent(
                             ready, "join",
                             {"gpu": w.gpu, "region": w.region,
-                             "speed": w.speed,
+                             "speed": w.speed, "slot": slot, "gen": gen + 1,
                              "chief": w.is_chief and not self.handover}))
                 elif ev.kind == "join":
                     w = SimWorker(next_wid, ev.payload["gpu"],
@@ -312,10 +343,18 @@ class FleetSim:
                                   is_chief=ev.payload.get("chief", False))
                     next_wid += 1
                     self.workers[w.wid] = w
+                    slot_of[w.wid] = (ev.payload.get("slot", -1),
+                                      ev.payload.get("gen", 0))
                     replacements += 1
                     events.append((t, f"join w{w.wid} ({w.gpu})"))
-                    lt = self.rev.lifetime(w.region, w.gpu,
-                                           start_hour=start_hour + t / 3600.0)
+                    if draws is not None:
+                        slot, gen = slot_of[w.wid]
+                        lt = draws.join_lifetime(
+                            traj, slot, gen, start_hour + t / 3600.0)
+                    else:
+                        lt = self.rev.lifetime(
+                            w.region, w.gpu,
+                            start_hour=start_hour + t / 3600.0)
                     if math.isfinite(lt):
                         heapq.heappush(q, FleetEvent(
                             t + lt * 3600.0, "revoke", {"wid": w.wid}))
@@ -325,40 +364,55 @@ class FleetSim:
         cost = sum(secs / 3600.0 * self.price_of.get(g, 0.0)
                    for g, secs in gpu_seconds.items())
         regions = {w.region for w in self.workers.values()}
-        return SimResult(t, int(steps), revocations, replacements, ckpt_time,
-                         recompute, lost, events, cost,
+        # steps accumulates float increments, so a completed run can sit
+        # an ulp below total_steps — the same epsilon the batched engine
+        # applies keeps steps_done (and SimStats.finished) truthful
+        return SimResult(t, int(steps + 1e-6), revocations, replacements,
+                         ckpt_time, recompute, lost, events, cost,
                          provider=self.provider.name,
                          region=regions.pop() if len(regions) == 1 else "")
 
     def run_many(self, total_steps: int, n: int, max_hours: float = 48.0,
-                 start_hour: float = 0.0) -> FleetEnsemble:
+                 start_hour: float = 0.0, *,
+                 engine: str = "batched") -> FleetEnsemble:
         """Simulate `n` independent trajectories of the same launch.
 
-        All initial lifetimes are pre-drawn here in one batched call per
-        (region, gpu) group of the roster — an (n, count) matrix from
-        `RevocationSampler.lifetimes` seeded with `self.seed` — and each
-        trajectory then runs on its own decorrelated seed block
-        (`seed + 1 + 4*j`, leaving room for the simulator's internal
-        seed/seed+1/seed+2/seed+3 streams), consumed only by replacement
-        joins and startup draws. `run(...)` with the same seed remains the
-        single-trajectory path; `run_many` never perturbs its streams.
+        All randomness comes from one `fleet_batched.FleetDraws`: initial
+        lifetimes are pre-drawn as a single (n, slots) matrix (one batched
+        `RevocationSampler.lifetimes` call per (region, gpu) roster group,
+        seeded with `self.seed` — the scheme this method has always used),
+        and replacement-chain draws come from counter-based streams keyed
+        on (seed, trajectory, slot, generation). Both engines therefore
+        simulate the *same* trajectories:
+
+        * ``engine="batched"`` (default) — the lockstep array engine
+          (`fleet_batched.run_batched`): all trajectories advance
+          simultaneously, next events found by vectorized min-reductions.
+        * ``engine="event"`` — the per-trajectory discrete-event loop
+          (`run`), kept as the parity oracle; identical
+          revocation/replacement counts, times equal up to float
+          association order.
+
+        `run(...)` with the same seed remains the single-trajectory path;
+        `run_many` never perturbs its streams.
         """
+        from repro.core.transient.fleet_batched import FleetDraws, run_batched
         if n < 1:
             raise ValueError(f"need at least one trajectory, got {n}")
-        groups: Dict[Tuple[str, str], List[int]] = {}
-        for idx, (_, gpu, region, _) in enumerate(self._roster):
-            groups.setdefault((region, gpu), []).append(idx)
-        ens_samp = RevocationSampler(self.seed, self.provider)
-        pre = np.empty((n, len(self._roster)))
-        for (region, gpu), idxs in groups.items():
-            draws = ens_samp.lifetimes(region, gpu, n * len(idxs),
-                                       start_hour)
-            pre[:, idxs] = draws.reshape(n, len(idxs))
-        results = []
-        for j in range(n):
-            sim = self._respawn(self.seed + 1 + 4 * j)
-            results.append(sim.run(total_steps, max_hours, start_hour,
-                                   initial_lifetimes=pre[j]))
+        if engine not in ("batched", "event"):
+            raise ValueError(f"unknown engine {engine!r}; "
+                             f"known: ('batched', 'event')")
+        draws = FleetDraws(self, n, start_hour)
+        if engine == "batched":
+            results = run_batched(self, total_steps, n, max_hours,
+                                  start_hour, draws=draws)
+        else:
+            results = []
+            for j in range(n):
+                sim = self._respawn(self.seed + 1 + 4 * j)
+                results.append(sim.run(total_steps, max_hours, start_hour,
+                                       initial_lifetimes=draws.initial[j],
+                                       draws=draws, traj=j))
         regions = {r.region for r in results}
         return FleetEnsemble(results,
                              SimStats.from_results(results, total_steps),

@@ -75,6 +75,11 @@ class LifetimeModel:
     lam: float
     p24: float  # P(revoked < 24h)
 
+    #: uniform-block width for `sample_from_uniforms` (LifetimeLaw
+    #: contract, repro/providers/base.py): 1 survival column + 16
+    #: (candidate, accept) thinning pairs
+    SAMPLE_UNIFORMS_K = 33
+
     @classmethod
     def calibrated(cls, region: str, gpu: str) -> "LifetimeModel":
         key = (region, gpu)
@@ -156,6 +161,46 @@ class LifetimeModel:
             w = _diurnal_weight(self.gpu, start_hour + cand)
             vals[got:] = np.where(w == 0.0, cand + 4.0, cand)
         out[revoked] = np.minimum(vals, MAX_LIFETIME_H)
+        return out
+
+    def sample_from_uniforms(self, U: np.ndarray,
+                             start_hours: np.ndarray) -> np.ndarray:
+        """Vectorized lifetimes from a pre-drawn uniform block (the fleet
+        engines' replacement-join path; see `LifetimeLaw` in
+        repro/providers/base.py for the contract): column 0 decides the
+        survival point mass, then up to 16 (candidate, accept) column
+        pairs run the Fig 9 diurnal thinning per row — each row has its
+        own local start hour, unlike `sample_batch`'s shared one. The
+        16-round cap with the hard-zero push fallback mirrors the pooled
+        rejection in `sample_batch`."""
+        U = np.atleast_2d(np.asarray(U, float))
+        hours = np.asarray(start_hours, float)
+        m = U.shape[0]
+        out = np.full(m, np.inf)
+        revoked = U[:, 0] < self.p24
+        if not revoked.any():
+            return out
+        idx = np.where(revoked)[0]
+        h = hours[idx]
+        raw24 = 1.0 - math.exp(-((MAX_LIFETIME_H / self.lam) ** self.k))
+        inv_env = 1.0 / _DIURNAL_MAX_WEIGHT
+        cand = self._inverse_cdf(U[idx, 1], raw24)
+        pending = U[idx, 2] >= (_diurnal_weight(self.gpu, h + cand)
+                                * inv_env)
+        for j in range(1, 16):
+            if not pending.any():
+                break
+            rows = np.where(pending)[0]
+            c2 = self._inverse_cdf(U[idx[rows], 1 + 2 * j], raw24)
+            cand[rows] = c2
+            acc = (U[idx[rows], 2 + 2 * j]
+                   < _diurnal_weight(self.gpu, h[rows] + c2) * inv_env)
+            pending[rows] = ~acc
+        if pending.any():
+            rows = np.where(pending)[0]
+            w = _diurnal_weight(self.gpu, h[rows] + cand[rows])
+            cand[rows] = np.where(w == 0.0, cand[rows] + 4.0, cand[rows])
+        out[idx] = np.minimum(cand, MAX_LIFETIME_H)
         return out
 
     def _sample_scalar(self, rng: np.random.Generator, n: int,

@@ -20,8 +20,10 @@ _STAGE_MEANS: Dict[str, Tuple[float, float, float]] = {
     "v5e": (30.0, 55.0, 20.0),      # TPU slice analogue
 }
 _ONDEMAND_DISCOUNT = {"k80": 11.14, "p100": 21.38, "v100": 21.0, "v5e": 25.0}
-_BASE_COV = 0.03
-_POST_REVOCATION_COV = 0.12        # 4x higher CoV right after a revocation
+BASE_COV = 0.03
+#: 4x higher CoV right after a revocation (Fig 7) — shared with the
+#: batched engine's pre-drawn delay pools (fleet_batched.FleetDraws)
+POST_REVOCATION_COV = 0.12
 
 
 @dataclasses.dataclass
@@ -44,7 +46,7 @@ class StartupModel:
 
     def sample(self, gpu: str, transient: bool = True,
                after_revocation: bool = False) -> Dict[str, float]:
-        cov = _POST_REVOCATION_COV if after_revocation else _BASE_COV
+        cov = POST_REVOCATION_COV if after_revocation else BASE_COV
         out = {}
         for name, mean in zip(("provisioning", "staging", "running"),
                               self.stage_means(gpu, transient)):

@@ -100,6 +100,27 @@ class PriceSignalLifetime(LifetimeLaw):
         # survived the sampling window
         return np.interp(target, cum, ts, right=np.inf)
 
+    #: single-column consumption: one uniform through the inverse
+    #: cumulative hazard (keeps the engines' pre-drawn pools minimal)
+    SAMPLE_UNIFORMS_K = 1
+
+    def sample_from_uniforms(self, U: np.ndarray,
+                             start_hours: np.ndarray) -> np.ndarray:
+        """Fleet-engine replacement-join sampler (LifetimeLaw contract):
+        inverse cumulative hazard of column 0, per-row launch hour. Rows
+        are grouped by the 15-min-quantized hazard grid their hour maps
+        to, so the cache behaves exactly as under `sample`."""
+        U = np.atleast_2d(np.asarray(U, float))
+        hours = np.asarray(start_hours, float)
+        target = -np.log(1.0 - U[:, 0])
+        out = np.empty(len(target))
+        keys = np.round(hours % 24.0 * 4.0) / 4.0
+        for key in np.unique(keys):
+            rows = keys == key
+            ts, cum = self._grid(float(key))
+            out[rows] = np.interp(target[rows], cum, ts, right=np.inf)
+        return out
+
     def mean_time_to_revocation(self) -> float:
         p_h = self.prob_revoked_within(self.horizon_h)
         return conditional_mean_from_cdf(self.cdf, p_h, self.horizon_h)

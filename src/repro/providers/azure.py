@@ -65,6 +65,20 @@ class TieredEvictionLifetime(LifetimeLaw):
         t = rng.exponential(1.0 / self.hazard_per_h, size=n)
         return np.where(t > self.horizon_h, np.inf, t)
 
+    #: single-column consumption: one uniform through the inverse
+    #: exponential CDF (keeps the engines' pre-drawn pools minimal)
+    SAMPLE_UNIFORMS_K = 1
+
+    def sample_from_uniforms(self, U: np.ndarray,
+                             start_hours: np.ndarray) -> np.ndarray:
+        """Fleet-engine replacement-join sampler (LifetimeLaw contract):
+        inverse-transform exponential of column 0 — same distribution as
+        `sample`'s ziggurat draw, deterministic in the uniform block.
+        Memoryless, so `start_hours` is irrelevant by construction."""
+        U = np.atleast_2d(np.asarray(U, float))
+        t = -np.log(1.0 - U[:, 0]) / self.hazard_per_h
+        return np.where(t > self.horizon_h, np.inf, t)
+
     def mean_time_to_revocation(self) -> float:
         p_h = self.prob_revoked_within(self.horizon_h)
         return conditional_mean_from_cdf(self.cdf, p_h, self.horizon_h)

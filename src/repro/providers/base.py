@@ -60,6 +60,23 @@ class LifetimeLaw(abc.ABC):
         path differs from the scalar one (e.g. GCP's diurnal thinning)."""
         return self.sample(rng, int(n), start_hour)
 
+    #: Columns of the pre-drawn uniform block `sample_from_uniforms`
+    #: may consume per lifetime (the fleet engines pre-draw
+    #: (trajectories, slots, SAMPLE_UNIFORMS_K) pools per replacement
+    #: generation).
+    SAMPLE_UNIFORMS_K: int = 33
+
+    #: Optional vectorized sampler from pre-drawn uniforms — the fleet
+    #: engines' replacement-join path (fleet_batched.FleetDraws). Set to
+    #: a method `(U: (m, K) uniforms, start_hours: (m,) local hours) ->
+    #: (m,) lifetimes` that is a *deterministic function of U* with the
+    #: same distribution as `sample` (the draw path may differ, e.g.
+    #: inverse-transform instead of ziggurat exponentials), vectorized
+    #: over per-sample start hours. Leave as None and the engines fall
+    #: back to one counter-based RNG stream per replacement — correct
+    #: for any custom law, just slower.
+    sample_from_uniforms = None
+
     @abc.abstractmethod
     def mean_time_to_revocation(self) -> float:
         """Conditional mean lifetime of revoked servers (hours)."""

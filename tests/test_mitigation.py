@@ -374,11 +374,13 @@ def test_bench_regression_gate(tmp_path):
     mod = importlib.util.module_from_spec(spec)
     spec.loader.exec_module(mod)
 
-    def write(name, speedup):
+    def write(name, speedup, engine_speedup=12.0):
         p = tmp_path / name
         p.write_text(json.dumps({
             "planner_grid": {"speedup": speedup, "batched_s": 0.01},
-            "ensemble": {"traj_per_s": 100.0}}))
+            "ensemble": {"traj_per_s": 100.0},
+            "batched_engine": {"speedup": engine_speedup,
+                               "traj_per_s": 50000.0}}))
         return str(p)
 
     base = write("base.json", 50.0)
@@ -386,6 +388,17 @@ def test_bench_regression_gate(tmp_path):
                      "--current", write("ok.json", 45.0)]) == 0
     assert mod.main(["--baseline", base,                      # >20% slower
                      "--current", write("bad.json", 30.0)]) == 1
+    # the lockstep engine has an absolute floor on top of the relative one
+    assert mod.main(["--baseline", base,
+                     "--current", write("eng.json", 45.0, 9.0)]) == 1
+    assert mod.main(["--baseline", base,
+                     "--current", write("eng2.json", 45.0, 10.5),
+                     "--min-engine-speedup", "10.0"]) == 0
+    # a current file missing the engine metric fails the gate
+    (tmp_path / "noeng.json").write_text(json.dumps({
+        "planner_grid": {"speedup": 50.0}, "ensemble": {}}))
+    assert mod.main(["--baseline", base,
+                     "--current", str(tmp_path / "noeng.json")]) == 1
     (tmp_path / "empty.json").write_text("{}")
     assert mod.main(["--baseline", str(tmp_path / "empty.json"),
                      "--current", base]) == 1
