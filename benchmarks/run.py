@@ -34,6 +34,7 @@ MODULES = [
     "cross_provider",
     "mc_speed",
     "lm_speed_models",
+    "chaos",
     "roofline",
 ]
 

@@ -5,6 +5,7 @@
     python -m repro plan     [--arch ...] --gpu v100 --workers 4 [--provider aws]
     python -m repro simulate [--arch ...] --gpu v100 --workers 4 [--provider azure]
     python -m repro predict  [--arch ...] --gpu v100 --workers 4 [--provider gcp]
+    python -m repro chaos    --scenario all [--engine batched|event] [--live]
     python -m repro bench    --only table1_speed,fig2_stability
     python -m repro dryrun   --arch qwen3-1.7b --shape train_4k
 
@@ -72,6 +73,32 @@ def build_parser() -> argparse.ArgumentParser:
                            help="ensemble stepper: lockstep array engine "
                                 "(default) or the per-trajectory event "
                                 "loop (docs/performance.md)")
+
+    c = sub.add_parser("chaos", help="scripted fault scenarios with "
+                                     "ground-truth-scored detection & "
+                                     "mitigation (docs/chaos.md)")
+    cli.add_arch_arg(c)
+    cli.add_scale_args(c)
+    c.add_argument("--scenario", default="all",
+                   help="registered scenario name, or 'all' (default)")
+    c.add_argument("--list", action="store_true",
+                   help="list registered scenarios and exit")
+    c.add_argument("--engine", default="batched",
+                   choices=("batched", "event"),
+                   help="fleet-ensemble stepper (a batched-vs-event "
+                        "parity probe runs either way)")
+    c.add_argument("--live", action=argparse.BooleanOptionalAction,
+                   default=True,
+                   help="drive the real trainer through scenarios that "
+                        "carry a live plan (--no-live: simulation only)")
+    c.add_argument("--samples", type=int, default=32,
+                   help="fleet-simulation trajectories per ensemble")
+    c.add_argument("--smoke", action="store_true",
+                   help="enforce each scenario's expectation gates; "
+                        "exit 1 if any fail")
+    c.add_argument("--compilation-cache-dir", default="",
+                   help="persistent XLA compilation cache for the live "
+                        "runs (repeat invocations skip re-jit)")
 
     b = sub.add_parser("bench", help="paper table/figure benchmark driver")
     b.add_argument("--only", default="",
@@ -219,6 +246,30 @@ def _cmd_predict(args) -> int:
     return 0
 
 
+def _cmd_chaos(args) -> int:
+    import json
+
+    from repro.chaos import list_scenarios
+    from repro.chaos.runner import run_scenarios
+
+    if args.list:
+        print("\n".join(list_scenarios()))
+        return 0
+    session = cli.session_from_args(args)
+    card = run_scenarios(args.scenario, session=session, engine=args.engine,
+                         live=args.live, samples=args.samples,
+                         seed=args.seed, smoke=args.smoke,
+                         progress=lambda m: print(m, file=sys.stderr))
+    print(json.dumps(card, indent=2, sort_keys=True))
+    if args.smoke and not card["passed"]:
+        fails = {name: c["smoke"]["failures"]
+                 for name, c in card["scenarios"].items()
+                 if not c["smoke"]["passed"]}
+        print(f"chaos smoke gates FAILED: {fails}", file=sys.stderr)
+        return 1
+    return 0
+
+
 def _cmd_bench(args) -> int:
     try:
         from benchmarks import run as bench_run
@@ -241,7 +292,7 @@ def _cmd_dryrun(rest: List[str]) -> int:
 _HANDLERS = {
     "train": _cmd_train, "serve": _cmd_serve, "plan": _cmd_plan,
     "simulate": _cmd_simulate, "predict": _cmd_predict,
-    "bench": _cmd_bench,
+    "chaos": _cmd_chaos, "bench": _cmd_bench,
 }
 
 

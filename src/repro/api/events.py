@@ -4,14 +4,21 @@ The trainer (and any future provider/backend) emits flat `(kind, payload)`
 events; the Session forwards them onto a bus so callers can observe a run
 without threading callbacks through every layer. Kinds emitted today:
 
-  step        {step, loss}
-  epoch       {step, kind, member_id, epoch, n_alive}
-  checkpoint  {step, sizes}
-  detection   {step, bottleneck, action, deviation}
-  restore     {step}
+  step                {step, loss}
+  epoch               {step, kind, member_id, epoch, n_alive}
+  checkpoint          {step, sizes}
+  checkpoint_failed   {step, failures}        (chaos ckpt-store outage)
+  detection           {step, bottleneck, action, deviation}
+  restore             {step}
+  mitigation          {step, action, n_ps, grad_compression, ...}
+  fault               {step, fault, ...}      (chaos injections)
+  handler_error       {kind, handler, error}  (a subscriber raised)
 
 Subscribe to a specific kind or to "*" for everything. Handlers run inline
-on the training thread — keep them cheap.
+on the training thread — keep them cheap. A handler that raises is
+*isolated*: the exception is swallowed, `handler_errors` is incremented and
+a `handler_error` event is emitted, so one bad observer can never kill the
+training loop it is observing.
 """
 from __future__ import annotations
 
@@ -33,6 +40,8 @@ class EventBus:
         self._subs: Dict[str, List[Handler]] = defaultdict(list)
         self._keep = keep_history
         self.history: List[Event] = []
+        #: total subscriber exceptions swallowed by `emit`
+        self.handler_errors = 0
 
     def subscribe(self, kind: str, handler: Handler) -> Handler:
         """Register `handler` for `kind` ("*" = all). Returns the handler so
@@ -50,8 +59,22 @@ class EventBus:
             self.history.append(Event(kind, payload))
             if len(self.history) > self._keep:
                 del self.history[: len(self.history) - self._keep]
+        failures: List[Tuple[Handler, Exception]] = []
         for handler in (*self._subs.get(kind, ()), *self._subs.get("*", ())):
-            handler(kind, payload)
+            try:
+                handler(kind, payload)
+            except Exception as e:  # isolate observers from the run
+                self.handler_errors += 1
+                failures.append((handler, e))
+        # report after the delivery loop so one bad handler cannot starve
+        # the rest; never recurse on handler_error itself (a raising
+        # handler_error subscriber would otherwise loop forever)
+        if failures and kind != "handler_error":
+            for handler, e in failures:
+                self.emit("handler_error", kind=kind,
+                          handler=getattr(handler, "__qualname__",
+                                          repr(handler)),
+                          error=f"{type(e).__name__}: {e}")
 
     def of_kind(self, kind: str) -> List[Event]:
         return [e for e in self.history if e.kind == kind]

@@ -28,6 +28,7 @@ from typing import Dict, List, Optional, Tuple
 from repro.configs import ARCH_IDS, RunConfig, get_config
 from repro.configs.base import ModelConfig
 from repro.api.events import EventBus
+from repro.core import jit_cache
 from repro.api.serving import ServeReport, generate
 from repro.core.perf_model.cluster_model import (Eq4Inputs, PSBottleneckModel,
                                                  WorkerSpec, cluster_speed,
@@ -84,6 +85,9 @@ class Session:
         self.run = run or RunConfig()
         self.arch = arch or cfg.name
         self.bus = bus or EventBus()
+        if self.run.compilation_cache_dir:
+            # persistent XLA cache: repeated chaos/live runs skip re-jit
+            jit_cache.enable_persistent_cache(self.run.compilation_cache_dir)
         # session-default transient market; plan/simulate/predict take a
         # per-call `provider=` override (name or FleetProvider instance)
         self.provider: FleetProvider = get_provider(provider)
@@ -263,7 +267,8 @@ class Session:
                  provider: Optional[object] = None,
                  start_hour: float = 0.0,
                  samples: int = 1,
-                 engine: str = "batched"):
+                 engine: str = "batched",
+                 chaos: object = None):
         """Discrete-event simulation on a transient cluster.
 
         Either a homogeneous (`n_workers` x `gpu`) cluster or an explicit
@@ -284,7 +289,34 @@ class Session:
         `run.grad_compression`, exactly like `Session.predict` — so
         predicted-vs-simulated error (§VI-A) stays meaningful for
         compressed runs.
+
+        `chaos` (a `repro.chaos.FaultTimeline`, or anything honoring its
+        interface) scripts faults into the simulated fleet — see
+        `Session.chaos` for the scenario-level entry point.
         """
+        sim, n_steps = self._fleet_sim(
+            n_workers=n_workers, gpu=gpu, region=region, counts=counts,
+            steps=steps, checkpoint_interval=checkpoint_interval, n_ps=n_ps,
+            seed=seed, replace=replace, handover=handover,
+            provider=provider, chaos=chaos)
+        if samples > 1:
+            return sim.run_many(n_steps, samples, max_hours=max_hours,
+                                start_hour=start_hour, engine=engine)
+        return sim.run(n_steps, max_hours=max_hours, start_hour=start_hour)
+
+    def _fleet_sim(self, *, n_workers: int = 4, gpu: str = "v100",
+                   region: Optional[str] = None,
+                   counts: Optional[Dict[str, int]] = None,
+                   steps: Optional[int] = None,
+                   checkpoint_interval: Optional[int] = None,
+                   n_ps: int = 1, seed: int = 0, replace: bool = True,
+                   handover: bool = True,
+                   provider: Optional[object] = None,
+                   chaos: object = None) -> Tuple[FleetSim, int]:
+        """Construct the configured `FleetSim` (and the resolved step
+        budget) without running it — `simulate()`'s builder, shared with
+        the chaos runner, which needs the sim object itself for the
+        shared-draws ground-truth hash."""
         prov = self._provider(provider)
         region = region or prov.default_region
         counts = counts or {gpu: n_workers}
@@ -311,11 +343,32 @@ class Session:
             seed=seed, replace=replace, handover=handover,
             price_of={g: prov.price(g) for g in counts}, provider=prov,
             n_tensors=self.n_tensors(),
-            grad_compression=self.run.grad_compression)
-        if samples > 1:
-            return sim.run_many(n_steps, samples, max_hours=max_hours,
-                                start_hour=start_hour, engine=engine)
-        return sim.run(n_steps, max_hours=max_hours, start_hour=start_hour)
+            grad_compression=self.run.grad_compression, chaos=chaos)
+        return sim, n_steps
+
+    # ---------------------------------------------------- chaos scenarios
+    def chaos(self, scenario: str = "all", *, engine: str = "batched",
+              live: bool = True, samples: int = 32, seed: int = 0,
+              smoke: bool = False) -> Dict[str, object]:
+        """Run scripted fault scenarios against this model and score the
+        detection/mitigation loop against the recorded ground truth.
+
+        `scenario` is a registered scenario name (see
+        `repro.chaos.list_scenarios()`) or `"all"`. Each scenario runs as
+        a fleet-simulation ensemble (`samples` faulted + baseline
+        trajectories on `engine`, plus a batched-vs-event parity probe);
+        scenarios with a live plan additionally drive the real
+        `TransientTrainer` under a virtual clock (`live=False` skips
+        that). `smoke=True` also checks each scenario's `expect` gates
+        and sets the scorecard's `passed` flag accordingly.
+
+        Returns the JSON-serializable scorecard `python -m repro chaos`
+        prints.
+        """
+        from repro.chaos import runner as chaos_runner
+        return chaos_runner.run_scenarios(
+            scenario, session=self, engine=engine, live=live,
+            samples=samples, seed=seed, smoke=smoke)
 
     # ------------------------------------------------ Eq (4)/(5) predict
     def predict(self, n_workers: int = 4, gpu: str = "v100",
@@ -383,7 +436,8 @@ class Session:
               mode: str = "sync",
               ps_model: Optional[PSBottleneckModel] = None,
               workers: Optional[List[WorkerSpec]] = None,
-              worker_step_times: Optional[List[float]] = None) -> TrainReport:
+              worker_step_times: Optional[List[float]] = None,
+              clock=None) -> TrainReport:
         """Run the transient-aware elastic trainer; profiler + Controller
         observations stream onto `self.bus`.
 
@@ -399,6 +453,9 @@ class Session:
         the §VI-B mitigation loop: the Controller attributes deviations
         to PS saturation and the trainer acts mid-run
         (add a PS / enable compression) and re-derives its prediction.
+        `clock` (a zero-arg callable returning seconds) replaces the
+        profiler's wall clock — the chaos harness injects virtual time so
+        detection latency is deterministic across machines.
         """
         if mode == "async_ps":
             # the §II emulation has no checkpointing, membership events or
@@ -440,7 +497,7 @@ class Session:
             members=[Member(i) for i in range(members)], holder=holder,
             predicted_speed=predicted_speed,
             on_event=lambda kind, payload: self.bus.emit(kind, **payload),
-            ps_model=ps_model, workers=workers)
+            ps_model=ps_model, workers=workers, clock=clock)
         self.trainer = trainer
         # NOTE: `run` (with the resolved checkpoint_dir) lives on the
         # trainer only — per-call overrides never mutate self.run

@@ -1,0 +1,29 @@
+"""Chaos subsystem: scripted fault scenarios with ground-truth-scored
+detection & mitigation (docs/chaos.md, docs/DESIGN.md §7).
+
+Three layers:
+
+* `injectors` — fault primitives (preemption waves, price spikes,
+  stragglers, PS crashes, checkpoint outages) and the `FaultTimeline`
+  both fleet engines consume;
+* `scenarios` — the named, seeded, composable scenario registry
+  (`@register_scenario`, `get_scenario`, `list_scenarios`);
+* `evaluator` / `runner` — ground-truth scoring of EventBus histories
+  and the scenario runner behind `Session.chaos` /
+  `python -m repro chaos`.
+"""
+from repro.chaos.evaluator import EXPECTED_ACTIONS, score_history
+from repro.chaos.injectors import (CheckpointOutage, FaultTimeline, PSCrash,
+                                   PreemptionWave, PriceSpike,
+                                   StragglerFault)
+from repro.chaos.runner import VirtualClock, run_scenario, run_scenarios
+from repro.chaos.scenarios import (LiveFault, LivePlan, Scenario,
+                                   get_scenario, list_scenarios,
+                                   register_scenario)
+
+__all__ = [
+    "CheckpointOutage", "EXPECTED_ACTIONS", "FaultTimeline", "LiveFault",
+    "LivePlan", "PSCrash", "PreemptionWave", "PriceSpike", "Scenario",
+    "StragglerFault", "VirtualClock", "get_scenario", "list_scenarios",
+    "register_scenario", "run_scenario", "run_scenarios", "score_history",
+]

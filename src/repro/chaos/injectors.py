@@ -1,0 +1,271 @@
+"""Chaos fault primitives and the `FaultTimeline` the fleet engines consume.
+
+The chaos subsystem (docs/DESIGN.md §7, docs/chaos.md) injects faults with
+known ground truth into all three execution paths. This module owns the
+*primitives* — each a frozen dataclass with a start, a duration and a
+magnitude, all relative to launch (hours of elapsed sim time) — and the
+`FaultTimeline` that compiles a list of them against one launch roster:
+
+  * `PreemptionWave` / `PriceSpike` — *hazard* faults: extra revocation
+    hazard over a window (a correlated regional capacity reclaim, or a
+    spot-price rise through the fleet's bid on AWS/Azure-style markets).
+    They act on *lifetimes*, not on the clock: every drawn lifetime is
+    deterministically transformed by an inverse-CDF thinning of the
+    window overlap, using draws keyed on (seed, fault, trajectory, slot,
+    generation) — so the batched and event engines see bit-identical
+    revocation timelines no matter in which order they consume them.
+  * `StragglerFault` — silently scales one roster slot's step speed
+    (degraded NIC / thermal throttling; Table III heterogeneity gone bad).
+  * `PSCrash` — scales the PS capacity ceiling (0 = hard down).
+  * `CheckpointOutage` — the checkpoint store fails saves: steps produce
+    no checkpoint-boundary pauses and `last_ckpt` stops advancing, so a
+    stock chief revocation after the window rolls further back.
+
+Speed/PS/ckpt faults are piecewise-constant in time; `boundaries_s` lists
+every instant a factor changes, and both engines treat those instants as
+(no-op) events so constant-speed advancement never spans a factor change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# domain-separation tags for the keyed hazard draws (arbitrary constants,
+# fixed forever so recorded scorecards stay reproducible)
+_TAG_INITIAL = 0xC4A05
+_TAG_JOIN = 0xC4A15
+
+
+@dataclasses.dataclass(frozen=True)
+class PreemptionWave:
+    """Correlated preemption wave: `hazard_per_h` of *extra* revocation
+    hazard over [start, start+duration), hitting every roster worker in
+    `region` (None = all regions) that is alive during the window."""
+    start_h: float
+    duration_h: float
+    hazard_per_h: float
+    region: Optional[str] = None
+    kind: str = dataclasses.field(default="preemption_wave", repr=False)
+
+    @property
+    def end_h(self) -> float:
+        return self.start_h + self.duration_h
+
+
+@dataclasses.dataclass(frozen=True)
+class PriceSpike:
+    """Market price rises through the fleet's bid: same mechanics as a
+    wave (extra hazard over a window) but provider-wide by default —
+    demand spikes hit every region's spot pool at once."""
+    start_h: float
+    duration_h: float
+    hazard_per_h: float
+    region: Optional[str] = None
+    kind: str = dataclasses.field(default="price_spike", repr=False)
+
+    @property
+    def end_h(self) -> float:
+        return self.start_h + self.duration_h
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerFault:
+    """One roster slot silently runs at `speed_factor` x its speed."""
+    start_h: float
+    duration_h: float
+    slot: int
+    speed_factor: float
+    kind: str = dataclasses.field(default="straggler", repr=False)
+
+    @property
+    def end_h(self) -> float:
+        return self.start_h + self.duration_h
+
+
+@dataclasses.dataclass(frozen=True)
+class PSCrash:
+    """PS capacity scaled by `capacity_factor` (0 = the server is down
+    and training stalls until the window ends)."""
+    start_h: float
+    duration_h: float
+    capacity_factor: float
+    kind: str = dataclasses.field(default="ps_crash", repr=False)
+
+    @property
+    def end_h(self) -> float:
+        return self.start_h + self.duration_h
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointOutage:
+    """Checkpoint saves fail fast during the window."""
+    start_h: float
+    duration_h: float
+    kind: str = dataclasses.field(default="ckpt_outage", repr=False)
+
+    @property
+    def end_h(self) -> float:
+        return self.start_h + self.duration_h
+
+
+_HAZARD_KINDS = (PreemptionWave, PriceSpike)
+Fault = object  # any of the dataclasses above
+
+
+class FaultTimeline:
+    """A scenario's faults compiled against one launch roster.
+
+    `roster` is `FleetSim._roster` — tuples of (wid, gpu, region, speed)
+    in slot order; `seed` is the *scenario* seed (hazard draws must not
+    depend on the per-trajectory engine seeds, or the engines would
+    diverge). All times are seconds of elapsed sim time; fault fields are
+    hours of elapsed sim time.
+    """
+
+    def __init__(self, faults: Iterable[Fault],
+                 roster: Sequence[Tuple], seed: int = 0):
+        self.faults: Tuple[Fault, ...] = tuple(faults)
+        self.seed = int(seed) % (2 ** 32)
+        self.regions = tuple(r for _, _, r, _ in roster)
+        self.n_slots = len(self.regions)
+        self.hazards = tuple((i, f) for i, f in enumerate(self.faults)
+                             if isinstance(f, _HAZARD_KINDS)
+                             and f.hazard_per_h > 0)
+        self.stragglers = tuple(f for f in self.faults
+                                if isinstance(f, StragglerFault))
+        self.ps = tuple(f for f in self.faults if isinstance(f, PSCrash))
+        self.outages = tuple(f for f in self.faults
+                             if isinstance(f, CheckpointOutage))
+        for f in self.stragglers:
+            if not 0 <= f.slot < self.n_slots:
+                raise ValueError(f"straggler slot {f.slot} outside the "
+                                 f"{self.n_slots}-slot roster")
+        # every instant a piecewise factor changes (hazard faults act on
+        # lifetimes, not on clocked factors, so they add no boundaries)
+        bounds = sorted({b * 3600.0
+                         for f in (*self.stragglers, *self.ps, *self.outages)
+                         for b in (f.start_h, f.end_h) if b > 0})
+        self.boundaries_s = np.asarray(bounds, float)
+
+    # ------------------------------------------------- piecewise factors
+    def speed_mults(self, t_s: np.ndarray) -> np.ndarray:
+        """(m, slots) per-worker speed multipliers at each time (seconds).
+        Factors are evaluated at the *start* of a constant-speed segment;
+        windows are half-open [start, end)."""
+        t = np.asarray(t_s, float)
+        out = np.ones((t.size, self.n_slots))
+        for f in self.stragglers:
+            active = (t >= f.start_h * 3600.0) & (t < f.end_h * 3600.0)
+            out[active, f.slot] *= f.speed_factor
+        return out
+
+    def ps_factor(self, t_s: np.ndarray) -> np.ndarray:
+        """(m,) PS capacity multipliers at each time (seconds)."""
+        t = np.asarray(t_s, float)
+        out = np.ones(t.size)
+        for f in self.ps:
+            active = (t >= f.start_h * 3600.0) & (t < f.end_h * 3600.0)
+            out[active] *= f.capacity_factor
+        return out
+
+    def ckpt_blocked(self, t_s: np.ndarray) -> np.ndarray:
+        """(m,) bool: is the checkpoint store down at each time."""
+        t = np.asarray(t_s, float)
+        out = np.zeros(t.size, bool)
+        for f in self.outages:
+            out[(t >= f.start_h * 3600.0) & (t < f.end_h * 3600.0)] = True
+        return out
+
+    def next_boundary(self, t_s: np.ndarray) -> np.ndarray:
+        """(m,) the next factor-change instant strictly after each time
+        (seconds; inf when none remain)."""
+        t = np.asarray(t_s, float)
+        if self.boundaries_s.size == 0:
+            return np.full(t.size, np.inf)
+        idx = np.searchsorted(self.boundaries_s, t, side="right")
+        padded = np.append(self.boundaries_s, np.inf)
+        return padded[idx]
+
+    # ------------------------------------------------ hazard transforms
+    def _cols(self, region: Optional[str]) -> np.ndarray:
+        return np.array([region is None or r == region
+                         for r in self.regions], bool)
+
+    @staticmethod
+    def _apply_hazard(lt: np.ndarray, U: np.ndarray, f, h0) -> np.ndarray:
+        """Thin one hazard window into drawn lifetimes.
+
+        A worker alive over [h0, h0+lt) overlaps the window for
+        `overlap = min(end, h0+lt) - max(start, h0)` hours; an extra
+        exponential clock `tau ~ Exp(hazard)` fires inside the overlap
+        with exactly the survival probability the added hazard implies,
+        and a firing clock moves the revocation earlier — survivors
+        (lt = inf) die iff tau lands inside the window."""
+        a = np.maximum(f.start_h, h0)
+        b = np.minimum(f.end_h, h0 + lt)
+        overlap = b - a
+        tau = -np.log1p(-U) / f.hazard_per_h
+        killed = (overlap > 0) & (tau < overlap)
+        return np.where(killed, np.minimum(lt, a + tau - h0), lt)
+
+    def transform_initial(self, lifetimes_h: np.ndarray) -> np.ndarray:
+        """Apply every hazard fault to the pre-drawn `(n, slots)`
+        initial-lifetime matrix (initial workers launch at elapsed hour
+        0). One keyed `(n, slots)` uniform matrix per fault, so the
+        transform is a pure function of (seed, fault index)."""
+        out = np.array(lifetimes_h, float, copy=True)
+        for fi, f in self.hazards:
+            cols = self._cols(f.region)
+            if not cols.any():
+                continue
+            rng = np.random.default_rng(np.random.SeedSequence(
+                (self.seed, _TAG_INITIAL, fi)))
+            U = rng.random(out.shape)
+            new = self._apply_hazard(out, U, f, 0.0)
+            out = np.where(cols[None, :], new, out)
+        return out
+
+    def transform_joins(self, lifetimes_h: np.ndarray, trajs: np.ndarray,
+                        slots: np.ndarray, gens: np.ndarray,
+                        elapsed_h: np.ndarray) -> np.ndarray:
+        """Apply every hazard fault to replacement-join lifetimes.
+        `elapsed_h` is each join's elapsed sim time (hours since launch).
+        Draws are keyed on (seed, fault, traj, slot, gen): identical no
+        matter which engine asks first, or in what batch grouping."""
+        lt = np.array(lifetimes_h, float, copy=True)
+        if not self.hazards or lt.size == 0:
+            return lt
+        trajs = np.asarray(trajs, int)
+        slots = np.asarray(slots, int)
+        gens = np.asarray(gens, int)
+        h0 = np.asarray(elapsed_h, float)
+        for fi, f in self.hazards:
+            cols = self._cols(f.region)
+            rows = cols[slots]
+            if not rows.any():
+                continue
+            U = np.array([
+                np.random.default_rng(np.random.SeedSequence(
+                    (self.seed, _TAG_JOIN, fi, int(tj), int(sl), int(g))
+                )).random()
+                for tj, sl, g in zip(trajs, slots, gens)])
+            new = self._apply_hazard(lt, U, f, h0)
+            lt = np.where(rows, new, lt)
+        return lt
+
+    # ------------------------------------------------------ ground truth
+    def truth_spans(self) -> List[dict]:
+        """The recorded ground-truth timeline: one dict per fault with
+        its window in seconds — what the evaluator scores against."""
+        spans = []
+        for f in self.faults:
+            span = {"kind": f.kind, "start_s": f.start_h * 3600.0,
+                    "end_s": f.end_h * 3600.0}
+            for field in ("region", "slot", "hazard_per_h",
+                          "speed_factor", "capacity_factor"):
+                if hasattr(f, field):
+                    span[field] = getattr(f, field)
+            spans.append(span)
+        return spans

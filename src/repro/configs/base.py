@@ -227,6 +227,9 @@ class RunConfig:
     checkpoint_dir: str = "/tmp/repro_ckpt"
     zero1: bool = True                    # shard optimizer state over data axis
     master_weights: bool = False          # bf16 live params + fp32 master in opt
-    grad_compression: str = "none"        # none | bf16 | int8
+    grad_compression: str = "none"        # none | bf16 | int8 | topk
     seed: int = 0
     microbatch: int = 0                   # 0 => no gradient accumulation
+    # persistent JAX compilation cache directory ("" = disabled): repeated
+    # Sessions/processes over the same step skip XLA recompilation
+    compilation_cache_dir: str = ""

@@ -69,6 +69,14 @@ class Controller:
                     action = Action.ENABLE_COMPRESSION
                     note = ("aggregate worker speed exceeds PS capacity "
                             f"{over}; compress the update payload")
+                elif ps_model.compression != "topk":
+                    # dense compression was not enough — escalate to top-k
+                    # sparsification (the last free lever) before paying
+                    # for another server
+                    action = Action.ENABLE_COMPRESSION
+                    note = ("aggregate worker speed exceeds PS capacity "
+                            f"{over} despite {ps_model.compression} "
+                            "compression; escalate to top-k sparsification")
                 else:
                     action = Action.ADD_PARAMETER_SERVER
                     note = ("aggregate worker speed exceeds PS capacity "

@@ -58,6 +58,10 @@ class TrainReport:
     wall_seconds: float
     #: §VI-B mitigations applied mid-run (see `apply_mitigation` payloads)
     mitigations: List[dict] = dataclasses.field(default_factory=list)
+    #: checkpoint saves that failed (chaos checkpoint-store outage)
+    checkpoint_failures: int = 0
+    #: chaos faults injected mid-run (see `inject_fault` payloads)
+    faults: List[dict] = dataclasses.field(default_factory=list)
 
 
 class TransientTrainer:
@@ -70,7 +74,8 @@ class TransientTrainer:
                  workers: Optional[List[WorkerSpec]] = None,
                  auto_mitigate: bool = True,
                  mitigation_scheme: str = "int8",
-                 max_mitigations: int = 8):
+                 max_mitigations: int = 8,
+                 clock: Optional[Callable[[], float]] = None):
         self.cfg = cfg
         self.run = run
         self.loader = loader
@@ -96,6 +101,13 @@ class TransientTrainer:
         # (the controller stops once capacity exceeds demand), but a badly
         # mis-set prediction could otherwise re-fire on every check
         self.max_mitigations = max_mitigations
+        # chaos hooks: an injectable profiler clock (virtual time makes
+        # detection latency deterministic across machines) and live fault
+        # state the chaos driver toggles via `inject_fault`
+        self.clock = clock
+        self.ckpt_outage = False
+        self.ckpt_failures = 0
+        self.faults: List[dict] = []
         self.restores = 0
         self.mitigations: List[dict] = []
         self._rebuild_step()
@@ -214,8 +226,12 @@ class TransientTrainer:
                 payload["payload_bytes"] = float(metrics["payload_bytes"])
                 payload["grad_compression"] = self.run.grad_compression
             self._emit("step", payload)
-            # 4. profile + detect (+ §VI-B mitigation)
-            self.profiler.record(step, loss=loss)
+            # 4. profile + detect (+ §VI-B mitigation). With an injected
+            # clock (chaos), the "step" emit above let the driver advance
+            # virtual time for this step before it is recorded.
+            self.profiler.record(
+                step, t=self.clock() if self.clock is not None else None,
+                loss=loss)
             if self.predicted_speed and step % check_every == 0 and step > 0:
                 det = self.controller.check(self.profiler,
                                             self.predicted_speed,
@@ -235,22 +251,59 @@ class TransientTrainer:
             # 5. checkpoint
             if self.run.checkpoint_interval and \
                     (step + 1) % self.run.checkpoint_interval == 0:
-                sizes = self.ckpt.save(
-                    step + 1, state,
-                    metadata={**self.loader.state(),
-                              "grad_compression": self.run.grad_compression})
-                if sizes is not None:
-                    checkpoints += 1
-                    self._emit("checkpoint", {"step": step + 1,
-                                              "sizes": sizes})
+                if self.ckpt_outage:
+                    # chaos checkpoint-store outage: the save fails fast
+                    # and the run continues on its last good checkpoint
+                    self.ckpt_failures += 1
+                    self._emit("checkpoint_failed",
+                               {"step": step + 1,
+                                "failures": self.ckpt_failures})
+                else:
+                    sizes = self.ckpt.save(
+                        step + 1, state,
+                        metadata={**self.loader.state(),
+                                  "grad_compression":
+                                  self.run.grad_compression})
+                    if sizes is not None:
+                        checkpoints += 1
+                        self._emit("checkpoint", {"step": step + 1,
+                                                  "sizes": sizes})
         report = TrainReport(
             steps_run=n_steps, final_loss=losses[-1] if losses else float("nan"),
             losses=losses, speed=self.profiler.speed(),
             epochs=self.members.epoch_no + 1, checkpoints=checkpoints,
             restores=self.restores, detections=self.detections,
             wall_seconds=time.monotonic() - t0,
-            mitigations=self.mitigations)
+            mitigations=self.mitigations,
+            checkpoint_failures=self.ckpt_failures, faults=self.faults)
         return state, report
+
+    # ---------------------------------------------------- chaos injection
+    def inject_fault(self, kind: str, step: int = 0, **payload) -> None:
+        """Flip one live fault on/off mid-run (the chaos driver's hook).
+
+        Kinds:
+          * ``ckpt_outage`` / ``ckpt_recover`` — fail checkpoint saves
+            fast (``checkpoint_failed`` events) / resume saving. The one
+            fault the trainer itself enacts, since it owns the save path.
+          * ``ps_crash`` / ``ps_recover`` and ``straggler`` /
+            ``straggler_end`` — bookkeeping only. These faults are
+            *silent*: the trainer's capacity model and prediction stay
+            healthy (a silently degraded cluster is exactly what the
+            controller must notice from measurement alone), while the
+            chaos driver's virtual clock prices every step at the truly
+            degraded cluster speed.
+        """
+        if kind == "ckpt_outage":
+            self.ckpt_outage = True
+        elif kind == "ckpt_recover":
+            self.ckpt_outage = False
+        elif kind not in ("ps_crash", "ps_recover",
+                          "straggler", "straggler_end"):
+            raise ValueError(f"unknown fault kind {kind!r}")
+        record = {"step": step, "fault": kind, **payload}
+        self.faults.append(record)
+        self._emit("fault", record)
 
     # ------------------------------------------------------- §VI-B mitigate
     def apply_mitigation(self, action: Action, state: st.TrainState,
@@ -260,11 +313,13 @@ class TransientTrainer:
 
         * ``ADD_PARAMETER_SERVER`` — provision one more PS in the capacity
           model (Li et al.'s first mitigation lever);
-        * ``ENABLE_COMPRESSION`` — switch the train step to the quantized
-          §VI-B path: the run config flips to ``mitigation_scheme``, the
-          jitted step is rebuilt (cache-keyed on the scheme), a zero
-          error-feedback residual is attached to the state, and the PS
-          capacity model is recalibrated with ``compression_ratio``.
+        * ``ENABLE_COMPRESSION`` — walk the compression ladder one rung:
+          an uncompressed run flips to ``mitigation_scheme`` (the dense
+          quantizer, attaching a zero error-feedback residual), a
+          dense-compressed run escalates to ``topk`` sparsification
+          (keeping its residual — the trees are shaped alike). Either
+          way the jitted step is rebuilt (cache-keyed on the scheme) and
+          the PS capacity model recalibrated with ``compression_ratio``.
 
         Either way ``predicted_speed`` is recomputed from the new capacity
         so subsequent `Controller.check` calls measure against the
@@ -275,18 +330,31 @@ class TransientTrainer:
         if action is Action.ADD_PARAMETER_SERVER:
             self.ps_model = self.controller.mitigate_ps(self.ps_model)
         elif action is Action.ENABLE_COMPRESSION:
-            if self.run.grad_compression == "none":
+            current = self.run.grad_compression
+            target = (self.mitigation_scheme if current == "none"
+                      else "topk")
+            if current != target and current != "topk":
                 self.run = dataclasses.replace(
-                    self.run, grad_compression=self.mitigation_scheme)
+                    self.run, grad_compression=target)
                 self._rebuild_step()
-                state = state._replace(
-                    residual=st.init_residual(state.params, self.run))
+                if current == "none":
+                    state = state._replace(
+                        residual=st.init_residual(state.params, self.run))
+                # dense -> topk keeps the residual: same tree shape, and
+                # the accumulated quantization error still belongs in the
+                # next push
             self.ps_model = self.controller.mitigate_compression(
                 self.ps_model, self.run.grad_compression)
         else:
             return state
         if self.workers:
             self.predicted_speed = cluster_speed(self.workers, self.ps_model)
+        # restart the measurement window: `speed()` averages the whole
+        # post-warmup history, so pre-mitigation records would keep the
+        # measured speed depressed for many steps and re-trigger the
+        # controller against the already-mitigated cluster
+        self.profiler.records.clear()
+        self.profiler._win.clear()
         record = {"step": step, "action": action.value,
                   "n_ps": self.ps_model.n_ps,
                   "grad_compression": self.run.grad_compression,

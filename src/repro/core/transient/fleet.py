@@ -35,6 +35,9 @@ class SimWorker:
     speed: float           # steps/s on the target model
     alive: bool = True
     is_chief: bool = False
+    #: launch-roster slot this worker (or its replacement chain) occupies;
+    #: chaos straggler faults target slots, not wids
+    slot: int = -1
 
 
 @dataclasses.dataclass
@@ -146,11 +149,13 @@ class FleetSim:
                  n_ps: int = 1, seed: int = 0, replace: bool = True,
                  handover: bool = True, price_of: Optional[Dict] = None,
                  provider: object = "gcp", n_tensors: int = 0,
-                 grad_compression: str = "none"):
+                 grad_compression: str = "none", chaos: object = None):
         from repro.providers import get_provider
         self.workers = {w.wid: w for w in workers}
         if workers:
             workers[0].is_chief = True
+        for idx, w in enumerate(workers):
+            w.slot = idx
         # immutable launch roster, so `run_many` can respawn trajectories
         # after `run` has mutated self.workers
         self._roster = tuple((w.wid, w.gpu, w.region, w.speed)
@@ -172,6 +177,10 @@ class FleetSim:
         self.repl = ReplacementModel(seed + 2, self.provider)
         self.rng = np.random.default_rng(seed + 3)
         self.price_of = price_of or {}
+        # a chaos.FaultTimeline compiled against this roster (or None):
+        # hazard faults transform the FleetDraws lifetime streams, while
+        # speed/PS/ckpt faults make the cluster piecewise-time-varying
+        self.chaos = chaos
 
     def _respawn(self, seed: int) -> "FleetSim":
         """A fresh simulator over the same launch roster and physics, with
@@ -186,17 +195,36 @@ class FleetSim:
                         seed=seed, replace=self.replace,
                         handover=self.handover, price_of=self.price_of,
                         provider=self.provider, n_tensors=self.n_tensors,
-                        grad_compression=self.grad_compression)
+                        grad_compression=self.grad_compression,
+                        chaos=self.chaos)
 
-    def _cluster_speed(self) -> float:
-        alive = [WorkerSpec(w.gpu, w.speed)
-                 for w in self.workers.values() if w.alive]
+    def _cluster_speed(self, t: Optional[float] = None) -> float:
+        """Cluster steps/s; with a chaos timeline and a sim clock `t`,
+        straggler multipliers and the PS capacity factor at `t` apply
+        (factors are constant within any span the run loop advances —
+        chaos boundaries are scheduled as events)."""
+        if self.chaos is None or t is None:
+            alive = [WorkerSpec(w.gpu, w.speed)
+                     for w in self.workers.values() if w.alive]
+            if not alive:
+                return 0.0
+            ps = PSBottleneckModel(self.model_bytes, self.n_ps,
+                                   n_tensors=self.n_tensors,
+                                   compression=self.grad_compression)
+            return cluster_speed(alive, ps)
+        alive = [w for w in self.workers.values() if w.alive]
         if not alive:
             return 0.0
+        ts = np.array([t])
+        mults = self.chaos.speed_mults(ts)[0]
+        raw = sum(w.speed * (mults[w.slot] if 0 <= w.slot < mults.size
+                             else 1.0) for w in alive)
         ps = PSBottleneckModel(self.model_bytes, self.n_ps,
                                n_tensors=self.n_tensors,
                                compression=self.grad_compression)
-        return cluster_speed(alive, ps)
+        capacity = (ps.capacity_steps_per_s()
+                    * float(self.chaos.ps_factor(ts)[0]))
+        return min(raw, capacity)
 
     def run(self, total_steps: int, max_hours: float = 48.0,
             start_hour: float = 0.0, *,
@@ -213,6 +241,15 @@ class FleetSim:
         batched engine consumes, making this event loop the exact parity
         oracle for `run_many(engine="batched")`; the default `None`
         keeps the historic sequential streams bit-for-bit."""
+        if self.chaos is not None and draws is None:
+            # standalone chaos run: route all randomness through the
+            # shared-draws streams (n=1), so hazard-transformed lifetimes
+            # are identical to run_many(n=1) on either engine
+            from repro.core.transient.fleet_batched import FleetDraws
+            draws = FleetDraws(self, 1, start_hour)
+            traj = 0
+            if initial_lifetimes is None:
+                initial_lifetimes = draws.initial[0]
         q: List[FleetEvent] = []
         next_wid = max(self.workers) + 1
         # wid -> (roster slot, generation) for the shared-draws contract
@@ -227,6 +264,13 @@ class FleetSim:
             if math.isfinite(lt):
                 heapq.heappush(q, FleetEvent(lt * 3600.0, "revoke",
                                              {"wid": w.wid}))
+        if self.chaos is not None:
+            # factor-change instants as no-op events: `advance` spans then
+            # never cross a speed/PS/ckpt change, so its constant-speed
+            # piecewise walk stays exact under faults
+            for b in self.chaos.boundaries_s:
+                if b < max_hours * 3600.0:
+                    heapq.heappush(q, FleetEvent(float(b), "chaos"))
         t = 0.0
         steps = 0.0
         last_ckpt_step = 0
@@ -240,13 +284,20 @@ class FleetSim:
             cluster speed with SEQUENTIAL checkpoint pauses (§IV-B) at every
             i_c boundary — exact piecewise simulation, no Zeno refinement."""
             nonlocal steps, t, ckpt_time, last_ckpt_step
-            sp = self._cluster_speed()
+            sp = self._cluster_speed(t)
             span = to_t - t
             for w in self.workers.values():
                 if w.alive:
                     gpu_seconds[w.gpu] = gpu_seconds.get(w.gpu, 0.0) + span
             remaining = span
+            blocked = (self.chaos is not None
+                       and bool(self.chaos.ckpt_blocked(np.array([t]))[0]))
             if sp > 0:
+                if blocked:
+                    # checkpoint-store outage: steps keep flowing but no
+                    # save happens — no pause, and last_ckpt_step freezes
+                    steps += sp * remaining
+                    remaining = 0.0
                 while remaining > 1e-12:
                     to_boundary = self.i_c - (steps % self.i_c)
                     if to_boundary <= 1e-9:
@@ -266,16 +317,21 @@ class FleetSim:
 
         def time_to_finish() -> float:
             """Wall-clock needed to reach total_steps from (steps, t),
-            including future checkpoint pauses."""
-            sp = self._cluster_speed()
+            including future checkpoint pauses. Projects the *current*
+            conditions forward — a pending chaos boundary is an event, so
+            the projection is recomputed whenever conditions change."""
+            sp = self._cluster_speed(t)
             if sp <= 0:
                 return float("inf")
             remaining_steps = total_steps - steps
+            if (self.chaos is not None
+                    and bool(self.chaos.ckpt_blocked(np.array([t]))[0])):
+                return remaining_steps / sp
             n_ckpts = int(total_steps // self.i_c) - int(steps // self.i_c)
             return remaining_steps / sp + n_ckpts * self.t_c
 
         while steps < total_steps - 1e-6 and t < max_hours * 3600.0:
-            sp = self._cluster_speed()
+            sp = self._cluster_speed(t)
             if sp <= 0.0 and not q:
                 break
             t_finish = t + time_to_finish()
@@ -313,7 +369,7 @@ class FleetSim:
                             lost_now = steps - last_ckpt_step
                             steps = float(last_ckpt_step)
                             lost += lost_now
-                            rec = lost_now / max(self._cluster_speed(), 1e-9)
+                            rec = lost_now / max(self._cluster_speed(t), 1e-9)
                             recompute += rec
                             events.append(
                                 (t, f"chief lost: recompute {lost_now:.0f} steps"))
@@ -337,10 +393,14 @@ class FleetSim:
                             {"gpu": w.gpu, "region": w.region,
                              "speed": w.speed, "slot": slot, "gen": gen + 1,
                              "chief": w.is_chief and not self.handover}))
+                elif ev.kind == "chaos":
+                    # factor-change boundary: advancing to it was the work
+                    events.append((t, "chaos boundary"))
                 elif ev.kind == "join":
                     w = SimWorker(next_wid, ev.payload["gpu"],
                                   ev.payload["region"], ev.payload["speed"],
-                                  is_chief=ev.payload.get("chief", False))
+                                  is_chief=ev.payload.get("chief", False),
+                                  slot=ev.payload.get("slot", -1))
                     next_wid += 1
                     self.workers[w.wid] = w
                     slot_of[w.wid] = (ev.payload.get("slot", -1),

@@ -67,6 +67,11 @@ class FleetDraws:
         self.seed = int(sim.seed)
         self.provider = sim.provider
         self.model_gflops = sim.model_gflops
+        self.start_hour = float(start_hour)
+        # the sim's chaos timeline (hazard faults transform every lifetime
+        # this object hands out — both engines therefore share identical
+        # post-fault revocation timelines by construction)
+        self.chaos = getattr(sim, "chaos", None)
         roster = sim._roster
         self.n = n
         self.n_slots = len(roster)
@@ -78,6 +83,8 @@ class FleetDraws:
         for (region, gpu), idxs in groups.items():
             draws = samp.lifetimes(region, gpu, n * len(idxs), start_hour)
             pre[:, idxs] = draws.reshape(n, len(idxs))
+        if self.chaos is not None:
+            pre = self.chaos.transform_initial(pre)
         self.initial = pre
         # per-slot laws and delay moments, resolved once
         self._laws = [self.provider.lifetime_model(region, gpu)
@@ -126,11 +133,8 @@ class FleetDraws:
         determined by the slot (a replacement inherits its slot's gpu)."""
         return float(self._level(gen)[0][traj, slot])
 
-    def join_lifetime(self, traj: int, slot: int, gen: int,
-                      start_hour_abs: float) -> float:
-        """The replacement's own lifetime (hours; np.inf = survived),
-        drawn at its realized local join hour so diurnal laws see it —
-        from the slot's own (region, gpu) lifetime law."""
+    def _raw_join_lifetime(self, traj: int, slot: int, gen: int,
+                           start_hour_abs: float) -> float:
         law = self._laws[slot]
         if getattr(law, "sample_from_uniforms", None) is None:
             return float(law.sample(self._fallback_rng(traj, slot, gen),
@@ -138,6 +142,20 @@ class FleetDraws:
         U = self._level(gen)[1][traj, slot][None, :]
         return float(law.sample_from_uniforms(
             U, np.array([start_hour_abs]))[0])
+
+    def join_lifetime(self, traj: int, slot: int, gen: int,
+                      start_hour_abs: float) -> float:
+        """The replacement's own lifetime (hours; np.inf = survived),
+        drawn at its realized local join hour so diurnal laws see it —
+        from the slot's own (region, gpu) lifetime law. Chaos hazard
+        faults (keyed on (seed, fault, traj, slot, gen)) then thin it."""
+        lt = self._raw_join_lifetime(traj, slot, gen, start_hour_abs)
+        if self.chaos is not None:
+            lt = float(self.chaos.transform_joins(
+                np.array([lt]), np.array([traj]), np.array([slot]),
+                np.array([gen]),
+                np.array([start_hour_abs - self.start_hour]))[0])
+        return lt
 
     def replacement_delays_batch(self, trajs: np.ndarray, slots: np.ndarray,
                                  gens: np.ndarray) -> np.ndarray:
@@ -159,8 +177,8 @@ class FleetDraws:
             rows = np.where(slots == s)[0]
             law = self._laws[s]
             if getattr(law, "sample_from_uniforms", None) is None:
-                out[rows] = [self.join_lifetime(int(i), int(s), int(g),
-                                                float(h))
+                out[rows] = [self._raw_join_lifetime(int(i), int(s), int(g),
+                                                     float(h))
                              for i, g, h in zip(trajs[rows], gens[rows],
                                                 hours[rows])]
                 continue
@@ -170,6 +188,10 @@ class FleetDraws:
                 sub = gg == g
                 U[sub] = self._level(int(g))[1][trajs[rows[sub]], s]
             out[rows] = law.sample_from_uniforms(U, hours[rows])
+        if self.chaos is not None:
+            out = self.chaos.transform_joins(
+                out, trajs, slots, gens,
+                np.asarray(hours, float) - self.start_hour)
         return out
 
 
@@ -229,6 +251,7 @@ def run_batched(sim: "FleetSim", total_steps: int, n: int,
     i_c, t_c = float(sim.i_c), float(sim.t_c)
     total = float(total_steps)
     tmax = max_hours * 3600.0
+    chaos = getattr(sim, "chaos", None)
     handover, replace = sim.handover, sim.replace
     graceful = (sim.provider.graceful_checkpoint_on_warning
                 and sim.provider.warning_seconds >= sim.t_c)
@@ -249,7 +272,14 @@ def run_batched(sim: "FleetSim", total_steps: int, n: int,
     st.chief[:, 0] = True   # FleetSim.__init__ marks workers[0] chief
 
     def _cluster_speed(rows: np.ndarray) -> np.ndarray:
-        return np.minimum(st.alive[rows] @ slot_speed, cap)
+        if chaos is None:
+            return np.minimum(st.alive[rows] @ slot_speed, cap)
+        # chaos factors at the segment start: straggler multipliers per
+        # slot plus the PS capacity factor (constant within any advanced
+        # span — factor boundaries are lockstep events)
+        m = chaos.speed_mults(st.t[rows])
+        return np.minimum((st.alive[rows] * m) @ slot_speed,
+                          cap * chaos.ps_factor(st.t[rows]))
 
     def _advance(rows: np.ndarray, target: np.ndarray) -> None:
         """Closed form of the event engine's `advance`: walk `rows` from
@@ -260,7 +290,14 @@ def run_batched(sim: "FleetSim", total_steps: int, n: int,
         span = target - st.t[rows]
         a = st.alive[rows]
         st.alive_seconds[rows] += a * span[:, None]
-        sp = np.minimum(a @ slot_speed, cap)
+        if chaos is None:
+            sp = np.minimum(a @ slot_speed, cap)
+            blk = np.zeros(rows.size, bool)
+        else:
+            m = chaos.speed_mults(st.t[rows])
+            sp = np.minimum((a * m) @ slot_speed,
+                            cap * chaos.ps_factor(st.t[rows]))
+            blk = chaos.ckpt_blocked(st.t[rows])
         pos = (sp > 0) & (span > 1e-12)
         if pos.any():
             spp = np.where(pos, sp, 1.0)
@@ -278,9 +315,15 @@ def run_batched(sim: "FleetSim", total_steps: int, n: int,
                 k > 0, boundary + spp * np.maximum(0.0, r - pause),
                 s0 + spp * span)
             new_ck = np.where(k > 0, (k - 1.0) * t_c + pause, 0.0)
+            # checkpoint-store outage: steps keep flowing, nothing saves —
+            # no pause, and last_ckpt freezes (the event engine's blocked
+            # branch in `advance`)
+            stepped = np.where(blk, s0 + spp * span, stepped)
+            new_ck = np.where(blk, 0.0, new_ck)
             st.steps[rows] = np.where(pos, stepped, s0)
             st.ckpt_time[rows] += np.where(pos, new_ck, 0.0)
-            st.last_ckpt[rows] = np.where(pos & (k > 0), np.round(boundary),
+            st.last_ckpt[rows] = np.where(pos & (k > 0) & ~blk,
+                                          np.round(boundary),
                                           st.last_ckpt[rows])
         st.t[rows] = target
 
@@ -293,30 +336,46 @@ def run_batched(sim: "FleetSim", total_steps: int, n: int,
         ev_arg = np.argmin(ev_all, axis=1)
         ev_t = ev_all[np.arange(rows.size), ev_arg]
         sp = _cluster_speed(rows)
+        if chaos is None:
+            blk = np.zeros(rows.size, bool)
+            nb = np.full(rows.size, np.inf)
+        else:
+            blk = chaos.ckpt_blocked(st.t[rows])
+            # factor-change boundaries are (no-op) events, exactly like
+            # the heap entries the event engine pushes — and like those,
+            # boundaries at/after tmax are never scheduled
+            nb = chaos.next_boundary(st.t[rows])
+            nb = np.where(nb < tmax, nb, np.inf)
         with np.errstate(divide="ignore", invalid="ignore"):
             rel = np.where(
                 sp > 0,
                 (total - st.steps[rows]) / np.where(sp > 0, sp, 1.0)
-                + (np.floor(total / i_c)
-                   - np.floor(st.steps[rows] / i_c)) * t_c,
+                + np.where(blk, 0.0,
+                           (np.floor(total / i_c)
+                            - np.floor(st.steps[rows] / i_c)) * t_c),
                 np.inf)
         t_fin = st.t[rows] + rel
         # the event loop's `sp <= 0 and not q: break` — all dead, nothing
-        # scheduled: freeze the trajectory where it stands
-        stuck = np.isinf(ev_t) & (sp <= 0)
+        # scheduled (not even a chaos boundary that could revive the PS):
+        # freeze the trajectory where it stands
+        stuck = np.isinf(ev_t) & (sp <= 0) & np.isinf(nb)
         st.done[rows[stuck]] = True
+        nxt = np.minimum(ev_t, nb)
         # matches `if q and q[0].t < t_finish` (strict)
-        ev = ~stuck & (ev_t < t_fin)
+        ev = ~stuck & (nxt < t_fin)
         fin = ~stuck & ~ev
         move = rows[ev | fin]
-        target = np.where(ev, np.maximum(ev_t, st.t[rows]), t_fin)[ev | fin]
+        target = np.where(ev, np.maximum(nxt, st.t[rows]), t_fin)[ev | fin]
         _advance(move, target)
         st.done[rows[fin]] = True   # steps reached total (modulo float fuzz)
 
-        er = rows[ev]
+        # a chaos boundary (nb < ev_t) is pure advancement — only worker
+        # events mutate fleet state
+        real = ev & (ev_t <= nxt)
+        er = rows[real]
         if er.size:
-            slot = ev_arg[ev] % S
-            is_join = ev_arg[ev] >= S
+            slot = ev_arg[real] % S
+            is_join = ev_arg[real] >= S
             # ---------------------------------------------------- revokes
             ri, rs = er[~is_join], slot[~is_join]
             if ri.size:

@@ -58,9 +58,12 @@ def add_train_args(p: argparse.ArgumentParser,
                         "asynchronous-PS emulation with staleness "
                         "telemetry")
     p.add_argument("--grad-compression", default="none",
-                   choices=("none", "bf16", "int8"),
+                   choices=("none", "bf16", "int8", "topk"),
                    help="§VI-B wire compression with error feedback; "
                         "also rescales the predicted PS capacity")
+    p.add_argument("--compilation-cache-dir", default=None,
+                   help="persistent JAX compilation cache directory — "
+                        "repeated runs skip re-jitting identical steps")
 
 
 def add_serve_args(p: argparse.ArgumentParser) -> None:
@@ -103,6 +106,7 @@ def run_config_from_args(args: argparse.Namespace) -> RunConfig:
         "total_steps": "steps", "checkpoint_interval": "checkpoint_interval",
         "master_weights": "master_weights", "seed": "seed",
         "grad_compression": "grad_compression",
+        "compilation_cache_dir": "compilation_cache_dir",
     }
     for field, attr in mapping.items():
         if field in fields and getattr(args, attr, None) is not None:

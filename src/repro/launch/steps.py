@@ -111,7 +111,7 @@ def make_train_step(cfg: ModelConfig, run: RunConfig, mesh=None,
                     rules=sh.MEGATRON_RULES):
     """Returns train_step(state, batch) -> (state, metrics).
 
-    With ``run.grad_compression`` in {"bf16", "int8"}, the clipped
+    With ``run.grad_compression`` in {"bf16", "int8", "topk"}, the clipped
     gradients take the §VI-B wire round-trip before the optimizer sees
     them: the error-feedback residual carried in ``state.residual`` is
     folded in, the sum is quantize-decompressed, and the quantization

@@ -209,12 +209,25 @@ def test_controller_escalates_compression_then_ps():
     assert det.bottleneck and det.action is Action.ENABLE_COMPRESSION
     ps = ctrl.mitigate_compression(ps, "int8")
     assert ps.compression == "int8"
-    # still saturated (8 > 2.0): the next lever is another PS
+    # still saturated (8 > 2.0): the next rung is sparser compression
     det2 = ctrl.check(prof, predicted_speed=8.0, ps_model=ps,
                       workers=workers)
-    assert det2.action is Action.ADD_PARAMETER_SERVER
+    assert det2.action is Action.ENABLE_COMPRESSION
+    ps = ctrl.mitigate_compression(ps, "topk")
+    assert ps.compression == "topk"
+
+
+def test_controller_adds_ps_when_topk_is_not_enough():
+    ps = PSBottleneckModel(1.25e9, 1, compression="topk")  # capacity 25
+    workers = [WorkerSpec("v100", 10.0)] * 4               # demand 40
+    ctrl = Controller()
+    prof = _stalled_profiler(measured=20.0)
+    # the compression ladder is exhausted: the only lever left is more PS
+    det = ctrl.check(prof, predicted_speed=40.0, ps_model=ps,
+                     workers=workers)
+    assert det.bottleneck and det.action is Action.ADD_PARAMETER_SERVER
     ps = ctrl.mitigate_ps(ps)
-    assert (ps.n_ps, ps.compression) == (2, "int8")
+    assert (ps.n_ps, ps.compression) == (2, "topk")
 
 
 def test_synthetic_bottleneck_mitigation_raises_measured_speed():
