@@ -21,6 +21,12 @@ job uploads it as an artifact):
   `speedup` here is the regression-gated metric (machine-normalized:
   both engines run on the same box) with a 10x absolute floor — the
   acceptance bar of the lockstep-engine PR.
+* **jit engine** — the compiled `engine="jit"` program vs the NumPy
+  lockstep engine at n=65536 trajectories of a chaos mega-ensemble
+  (`regional_wave`), shared draws, raw array stats on both sides,
+  steady-state (compile/pool residency excluded). Regression-gated like
+  the batched entry, with a 5x absolute floor — the acceptance bar of
+  the jit-engine PR.
 """
 from __future__ import annotations
 
@@ -56,6 +62,8 @@ SAMPLES = 200
 HOURS = [0, 3, 6, 9, 12, 15, 18, 21]
 ENSEMBLE_N = 64
 BATCHED_N = 1024
+JIT_N = 65536
+JIT_SCENARIO = "regional_wave"
 
 
 # ------------------------------------------------- pinned scalar baseline
@@ -221,15 +229,65 @@ def bench_batched_engine(n: int = BATCHED_N) -> dict:
     }
 
 
+def bench_jit_engine(n: int = JIT_N) -> dict:
+    """Compiled jit engine vs the NumPy lockstep engine, work-for-work
+    (shared `FleetDraws`, `raw=True` array stats on both sides so neither
+    pays the 65k-`SimResult` construction) on a chaos mega-ensemble —
+    the workload the jit engine exists for. A chaos timeline's fault
+    windows are *global* event stops: every trajectory processes every
+    boundary, which defeats the NumPy engine's shrinking active set and
+    leaves it re-walking full-width rounds under the per-round Python
+    transform overhead, while the compiled `lax.while_loop` fuses them.
+    Parity is asserted in-bench (identical revocation counts) so the
+    timed programs provably do the same work. Engine warm-up (XLA
+    compilation, device pool residency, FleetDraws level materialization)
+    happens before timing: the measurement is steady-state re-scoring
+    throughput, the planner-loop regime (docs/performance.md)."""
+    import jax
+
+    from repro.api.session import Session
+    from repro.chaos.scenarios import get_scenario
+    from repro.core.transient.fleet_batched import FleetDraws, run_batched
+    from repro.core.transient.fleet_jit import run_jit
+
+    sc = get_scenario(JIT_SCENARIO)
+    ses = Session.from_arch("qwen3-1.7b", smoke=True)
+    sim, n_steps = ses._fleet_sim(
+        n_workers=sc.n_workers, gpu=sc.gpu, region=sc.region,
+        steps=sc.total_steps, seed=0, handover=sc.handover,
+        provider=sc.provider)
+    sim.chaos = sc.timeline(sim._roster, seed=0)
+    draws = FleetDraws(sim, n, 0.0)
+    args = (n_steps, n, sc.max_hours, 0.0)
+    rb = run_batched(sim, *args, draws=draws, raw=True)
+    rj = run_jit(sim, *args, draws=draws, raw=True)
+    if not (rb["revocations"] == rj["revocations"]).all():
+        raise AssertionError(
+            "engine parity violated inside bench_jit_engine — the timed "
+            "engines are not doing identical work")
+    batched_s = _best_of(lambda: run_batched(sim, *args, draws=draws,
+                                             raw=True), reps=2)
+    jit_s = _best_of(lambda: run_jit(sim, *args, draws=draws, raw=True))
+    return {
+        "trajectories": n, "scenario": JIT_SCENARIO, "steps": n_steps,
+        "devices": len(jax.devices()),
+        "batched_s": round(batched_s, 4), "jit_s": round(jit_s, 4),
+        "traj_per_s": round(n / jit_s, 1),
+        "speedup": round(batched_s / jit_s, 1),
+    }
+
+
 def run():
     grid = bench_planner_grid()
     ens = bench_ensemble()
     eng = bench_batched_engine()
+    jit = bench_jit_engine()
     payload = {
-        "schema": 1,
+        "schema": 2,
         "planner_grid": grid,
         "ensemble": ens,
         "batched_engine": eng,
+        "jit_engine": jit,
     }
     OUT_PATH.write_text(json.dumps(payload, indent=2) + "\n")
     return [
@@ -251,6 +309,13 @@ def run():
                      f"{eng['event_s']}s ({eng['event_traj_per_s']} traj/s)"
                      f" -> batched {eng['batched_s']}s "
                      f"({eng['traj_per_s']} traj/s) (speedup x)")},
+        {"name": (f"mc_speed/jit_engine/{jit['scenario']}/"
+                  f"n{jit['trajectories']}"),
+         "value": jit["speedup"],
+         "derived": (f"{jit['trajectories']} chaos trajectories on "
+                     f"{jit['devices']} device(s): batched "
+                     f"{jit['batched_s']}s -> jit {jit['jit_s']}s "
+                     f"({jit['traj_per_s']} traj/s) (speedup x)")},
     ]
 
 

@@ -11,17 +11,21 @@ metrics are *relative* ones each run measures on its own box:
 * `batched_engine.speedup` — the lockstep ensemble engine vs. the
   event-loop oracle at n=1024 trajectories, which additionally must
   stay above an absolute floor (default 10x, the lockstep-engine PR's
-  acceptance bar).
+  acceptance bar);
+* `jit_engine.speedup` — the compiled `engine="jit"` program vs. the
+  NumPy lockstep engine at n=65536 chaos trajectories, with its own
+  absolute floor (default 5x, the jit-engine PR's acceptance bar).
 
-Absolute `batched_s` numbers are reported for context but never gated.
+Absolute `batched_s`/`jit_s` numbers are reported for context but never
+gated.
 
     python scripts/check_bench_regression.py [--max-slowdown 0.2] \
-        [--min-engine-speedup 10.0] \
+        [--min-engine-speedup 10.0] [--min-jit-speedup 5.0] \
         [--baseline benchmarks/BENCH_mc.baseline.json] \
         [--current BENCH_mc.json]
 
 Exit nonzero when a current speedup < (1 - max_slowdown) * its baseline,
-or the engine speedup < the absolute floor.
+or an engine speedup < its absolute floor.
 """
 from __future__ import annotations
 
@@ -38,7 +42,8 @@ def _load(path: str) -> dict:
 
 
 def check(baseline: dict, current: dict, max_slowdown: float,
-          min_engine_speedup: float = 10.0) -> list:
+          min_engine_speedup: float = 10.0,
+          min_jit_speedup: float = 5.0) -> list:
     errors = []
     base_grid = baseline.get("planner_grid", {})
     cur_grid = current.get("planner_grid", {})
@@ -74,6 +79,24 @@ def check(baseline: dict, current: dict, max_slowdown: float,
                 f"below {eng_floor:.1f}x (max of {1 - max_slowdown:.0%} "
                 f"of the committed {base_eng}x baseline and the "
                 f"{min_engine_speedup}x absolute floor)")
+    base_jit = baseline.get("jit_engine", {}).get("speedup")
+    cur_jit = current.get("jit_engine", {}).get("speedup")
+    if base_jit is None or cur_jit is None:
+        errors.append(
+            "jit_engine.speedup missing from baseline or current")
+    else:
+        jit_floor = max((1.0 - max_slowdown) * base_jit, min_jit_speedup)
+        print(f"jit_engine: baseline speedup {base_jit}x, current "
+              f"{cur_jit}x "
+              f"({current['jit_engine'].get('traj_per_s')} traj/s on "
+              f"{current['jit_engine'].get('devices')} device(s)); "
+              f"floor {jit_floor:.1f}x")
+        if cur_jit < jit_floor:
+            errors.append(
+                f"jit-engine regression: speedup {cur_jit}x fell below "
+                f"{jit_floor:.1f}x (max of {1 - max_slowdown:.0%} of the "
+                f"committed {base_jit}x baseline and the "
+                f"{min_jit_speedup}x absolute floor)")
     ens_b = baseline.get("ensemble", {}).get("traj_per_s")
     ens_c = current.get("ensemble", {}).get("traj_per_s")
     if ens_b and ens_c:  # informational only: absolute, machine-dependent
@@ -94,9 +117,13 @@ def main(argv=None) -> int:
     ap.add_argument("--min-engine-speedup", type=float, default=10.0,
                     help="absolute batched-vs-event floor at n=1024 "
                          "(default 10.0)")
+    ap.add_argument("--min-jit-speedup", type=float, default=5.0,
+                    help="absolute jit-vs-batched floor at n=65536 "
+                         "chaos trajectories (default 5.0)")
     args = ap.parse_args(argv)
     errors = check(_load(args.baseline), _load(args.current),
-                   args.max_slowdown, args.min_engine_speedup)
+                   args.max_slowdown, args.min_engine_speedup,
+                   args.min_jit_speedup)
     for e in errors:
         print(f"FAIL: {e}", file=sys.stderr)
     if not errors:

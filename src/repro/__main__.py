@@ -5,7 +5,7 @@
     python -m repro plan     [--arch ...] --gpu v100 --workers 4 [--provider aws]
     python -m repro simulate [--arch ...] --gpu v100 --workers 4 [--provider azure]
     python -m repro predict  [--arch ...] --gpu v100 --workers 4 [--provider gcp]
-    python -m repro chaos    --scenario all [--engine batched|event] [--live]
+    python -m repro chaos    --scenario all [--engine batched|event|jit] [--live]
     python -m repro bench    --only table1_speed,fig2_stability
     python -m repro dryrun   --arch qwen3-1.7b --shape train_4k
 
@@ -58,7 +58,7 @@ def build_parser() -> argparse.ArgumentParser:
                                 "ensemble per cell with time/cost "
                                 "percentiles")
             q.add_argument("--engine", default="batched",
-                           choices=("batched", "event"),
+                           choices=("batched", "event", "jit"),
                            help="trajectory stepper for --score sim "
                                 "(docs/performance.md)")
             # planning is uncapped unless the user asks for the Fig 4 PS
@@ -69,10 +69,11 @@ def build_parser() -> argparse.ArgumentParser:
                            help="trajectories; >1 reports the p50/p90/mean "
                                 "ensemble summary (SimStats)")
             q.add_argument("--engine", default="batched",
-                           choices=("batched", "event"),
+                           choices=("batched", "event", "jit"),
                            help="ensemble stepper: lockstep array engine "
-                                "(default) or the per-trajectory event "
-                                "loop (docs/performance.md)")
+                                "(default), the per-trajectory event "
+                                "loop, or the compiled jit program "
+                                "(docs/performance.md)")
 
     c = sub.add_parser("chaos", help="scripted fault scenarios with "
                                      "ground-truth-scored detection & "
@@ -84,8 +85,8 @@ def build_parser() -> argparse.ArgumentParser:
     c.add_argument("--list", action="store_true",
                    help="list registered scenarios and exit")
     c.add_argument("--engine", default="batched",
-                   choices=("batched", "event"),
-                   help="fleet-ensemble stepper (a batched-vs-event "
+                   choices=("batched", "event", "jit"),
+                   help="fleet-ensemble stepper (an engine-vs-event "
                         "parity probe runs either way)")
     c.add_argument("--live", action=argparse.BooleanOptionalAction,
                    default=True,

@@ -220,7 +220,8 @@ class Session:
 
         `score="sim"` replaces the Eq (4) point estimate with a full
         fleet-simulation ensemble per cell (`samples` trajectories on
-        the lockstep `engine`), so every plan also carries realized
+        `engine` — "batched", "event", or "jit"), so every plan also
+        carries realized
         time/cost percentiles and the `finished` censoring count —
         simulation-backed planning instead of the closed form alone.
         A sim-scored sweep ALWAYS simulates under the Fig 4 PS capacity
@@ -282,8 +283,10 @@ class Session:
         returns a `FleetEnsemble` whose `.stats` is the p50/p90/mean
         `SimStats` summary; `engine` picks the trajectory stepper —
         "batched" (default) is the lockstep array engine, "event" the
-        per-trajectory discrete-event loop kept as the parity oracle
-        (docs/performance.md has the selection guide).
+        per-trajectory discrete-event loop kept as the parity oracle,
+        "jit" the same lockstep rounds compiled into one jitted JAX
+        program for mega-ensembles (docs/performance.md has the
+        selection guide).
 
         The simulated PS capacity uses this model's variable count and
         `run.grad_compression`, exactly like `Session.predict` — so
@@ -356,7 +359,8 @@ class Session:
         `scenario` is a registered scenario name (see
         `repro.chaos.list_scenarios()`) or `"all"`. Each scenario runs as
         a fleet-simulation ensemble (`samples` faulted + baseline
-        trajectories on `engine`, plus a batched-vs-event parity probe);
+        trajectories on `engine` — "batched", "event" or "jit" — plus an
+        engine-vs-event parity probe);
         scenarios with a live plan additionally drive the real
         `TransientTrainer` under a virtual clock (`live=False` skips
         that). `smoke=True` also checks each scenario's `expect` gates

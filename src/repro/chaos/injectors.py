@@ -188,6 +188,50 @@ class FaultTimeline:
         padded = np.append(self.boundaries_s, np.inf)
         return padded[idx]
 
+    def factor_tables(self) -> Tuple[np.ndarray, np.ndarray,
+                                     np.ndarray, np.ndarray]:
+        """Piecewise-constant factor tables for device-resident engines
+        (`fleet_jit`): `(boundaries_s, speed_mults, ps_factor,
+        ckpt_blocked)` where segment i covers `[b_{i-1}, b_i)` (b_{-1}=0,
+        b_m=inf) and the three tables hold each segment's factors,
+        evaluated at its start — shapes `(m,)`, `(m+1, slots)`, `(m+1,)`,
+        `(m+1,)`. `searchsorted(boundaries_s, t, 'right')` is the segment
+        index at time t, the same half-open [start, end) semantics the
+        callable factor methods implement."""
+        starts = np.concatenate([[0.0], self.boundaries_s])
+        return (self.boundaries_s, self.speed_mults(starts),
+                self.ps_factor(starts), self.ckpt_blocked(starts))
+
+    def hazard_tables(self) -> Tuple[np.ndarray, np.ndarray,
+                                     np.ndarray, np.ndarray]:
+        """The hazard faults as arrays for device-resident engines:
+        `(start_h, end_h, hazard_per_h, cols)` with shapes `(F,)` x3 and
+        `(F, slots)` (bool: does fault f hit slot s's region), in
+        `self.hazards` order — the order `transform_*` applies them."""
+        F = len(self.hazards)
+        starts = np.array([f.start_h for _, f in self.hazards], float)
+        ends = np.array([f.end_h for _, f in self.hazards], float)
+        rates = np.array([f.hazard_per_h for _, f in self.hazards], float)
+        cols = (np.array([self._cols(f.region) for _, f in self.hazards],
+                         bool) if F else np.zeros((0, self.n_slots), bool))
+        return starts, ends, rates, cols
+
+    def join_uniform_matrix(self, n: int, gen: int) -> np.ndarray:
+        """The keyed join-transform uniforms for one generation level as
+        an `(n, slots, F)` matrix — element [traj, slot, fi] is exactly
+        the `(seed, _TAG_JOIN, fault, traj, slot, gen)` draw
+        `transform_joins` makes, pre-materialized so a device-resident
+        engine can apply the hazard thinning without host callbacks."""
+        F = len(self.hazards)
+        out = np.empty((n, self.n_slots, F))
+        for k, (fi, _) in enumerate(self.hazards):
+            for tj in range(n):
+                for sl in range(self.n_slots):
+                    out[tj, sl, k] = np.random.default_rng(
+                        np.random.SeedSequence(
+                            (self.seed, _TAG_JOIN, fi, tj, sl, gen))).random()
+        return out
+
     # ------------------------------------------------ hazard transforms
     def _cols(self, region: Optional[str]) -> np.ndarray:
         return np.array([region is None or r == region

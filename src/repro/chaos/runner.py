@@ -95,10 +95,13 @@ def _run_sim(session, sc: Scenario, engine: str, samples: int,
     baseline = build(chaos=False)[0].run_many(
         n_steps, samples, max_hours=sc.max_hours, engine=engine)
 
-    # two-engine parity probe on a small slice of the ensemble
+    # two-engine parity probe on a small slice of the ensemble: the
+    # requested engine (falling back to "batched" when the requested one
+    # *is* the oracle) vs. the per-trajectory event loop
+    probe = engine if engine != "event" else "batched"
     pa = build(chaos=True)[0].run_many(n_steps, PARITY_SAMPLES,
                                        max_hours=sc.max_hours,
-                                       engine="batched")
+                                       engine=probe)
     pb = build(chaos=True)[0].run_many(n_steps, PARITY_SAMPLES,
                                        max_hours=sc.max_hours,
                                        engine="event")
@@ -123,7 +126,7 @@ def _run_sim(session, sc: Scenario, engine: str, samples: int,
             "extra_lost_steps": round(fs["lost_steps_mean"]
                                       - bs["lost_steps_mean"], 6),
         },
-        "parity": {"trajectories": PARITY_SAMPLES,
+        "parity": {"trajectories": PARITY_SAMPLES, "engine": probe,
                    "counts_equal": counts_equal,
                    "time_max_rel_err": time_err},
     }

@@ -137,8 +137,8 @@ def plan_launch(gpu: str, n_workers: int, worker_speed: float,
 
     * ``"eq4"`` (default) — the Eq (4) point estimate around one batched
       lifetime draw (+ binomial stderr), exactly the historic planner.
-    * ``"sim"`` — a full `FleetSim.run_many` ensemble per cell on the
-      lockstep `engine` (`"batched"`/`"event"`): every plan carries
+    * ``"sim"`` — a full `FleetSim.run_many` ensemble per cell on
+      `engine` (`"batched"`/`"event"`/`"jit"`): every plan carries
       realized time/cost percentiles (`time_p50_s`/`time_p90_s`/
       `cost_p50`/`cost_p90`), the trajectory-sample revocation stderr and
       the `finished` censoring count, so the chosen cell reflects the

@@ -452,6 +452,11 @@ class FleetSim:
           (`run`), kept as the parity oracle; identical
           revocation/replacement counts, times equal up to float
           association order.
+        * ``engine="jit"`` — the same lockstep rounds compiled into one
+          jitted JAX program (`fleet_jit.run_jit`): state on device,
+          draws pre-materialized, trajectories sharded across visible
+          devices. Same parity contract; requires a provider whose
+          lifetime law has a jittable port (gcp/aws/azure).
 
         `run(...)` with the same seed remains the single-trajectory path;
         `run_many` never perturbs its streams.
@@ -459,13 +464,17 @@ class FleetSim:
         from repro.core.transient.fleet_batched import FleetDraws, run_batched
         if n < 1:
             raise ValueError(f"need at least one trajectory, got {n}")
-        if engine not in ("batched", "event"):
+        if engine not in ("batched", "event", "jit"):
             raise ValueError(f"unknown engine {engine!r}; "
-                             f"known: ('batched', 'event')")
+                             f"known: ('batched', 'event', 'jit')")
         draws = FleetDraws(self, n, start_hour)
         if engine == "batched":
             results = run_batched(self, total_steps, n, max_hours,
                                   start_hour, draws=draws)
+        elif engine == "jit":
+            from repro.core.transient.fleet_jit import run_jit
+            results = run_jit(self, total_steps, n, max_hours,
+                              start_hour, draws=draws)
         else:
             results = []
             for j in range(n):

@@ -225,13 +225,17 @@ class _State:
 
 def run_batched(sim: "FleetSim", total_steps: int, n: int,
                 max_hours: float = 48.0, start_hour: float = 0.0,
-                draws: Optional[FleetDraws] = None) -> List["SimResult"]:
+                draws: Optional[FleetDraws] = None, raw: bool = False):
     """Advance `n` trajectories of `sim`'s launch roster in lockstep.
 
     Returns one `SimResult` per trajectory (in trajectory order). The
     per-event text log is not materialized (`events=[]`) — it is the one
     `SimResult` field that cannot be array-typed; everything else matches
-    the event engine under the shared-`draws` contract.
+    the event engine under the shared-`draws` contract. `raw=True`
+    returns the same stats as a dict of per-trajectory arrays instead of
+    `SimResult` objects — the engine-core form `bench_jit_engine` times
+    (building n dataclasses costs more than a 65k-trajectory ensemble
+    run) and array consumers aggregate directly.
     """
     from repro.core.transient.fleet import SimResult
 
@@ -436,6 +440,14 @@ def run_batched(sim: "FleetSim", total_steps: int, n: int,
     cost = (st.alive_seconds / 3600.0) @ price
     regions = set(slot_region)
     region = regions.pop() if len(regions) == 1 else ""
+    if raw:
+        return {"total_time_s": st.t,
+                "steps_done": (st.steps + 1e-6).astype(np.int64),
+                "revocations": st.revocations.astype(np.int64),
+                "replacements": st.replacements.astype(np.int64),
+                "checkpoint_time_s": st.ckpt_time,
+                "recompute_time_s": st.recompute,
+                "lost_steps": st.lost, "monetary_cost": cost}
     return [SimResult(
         total_time_s=float(st.t[j]),
         steps_done=int(st.steps[j] + 1e-6),

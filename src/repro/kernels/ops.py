@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import event_select as es
 from repro.kernels import flash_attention as fa
 from repro.kernels import ref
 from repro.kernels import rmsnorm as rn
@@ -21,6 +22,19 @@ from repro.kernels import ssd_scan as ss
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# event select: Pallas on TPU, XLA reference elsewhere (interpret-mode Pallas
+# would run the kernel body row-block by row-block in Python — far slower
+# than the fused XLA min/argmin, so CPU/GPU fall back automatically)
+# ---------------------------------------------------------------------------
+def event_select(ev):
+    """(n, m) candidate-event times, inf = masked -> (min_t (n,), argmin
+    (n,) int32), ties broken by lowest column. Not differentiable."""
+    if _interpret():
+        return ref.event_select_ref(ev)
+    return es.event_select_fwd(ev, interpret=False)
 
 
 # ---------------------------------------------------------------------------

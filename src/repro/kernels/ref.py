@@ -26,6 +26,16 @@ def flash_attention_ref(q, k, v, causal: bool = True, scale=None):
     return out.reshape(B, Sq, H, hd).astype(q.dtype)
 
 
+def event_select_ref(ev):
+    """Oracle for the event-select kernel: per-row masked min + argmin over
+    an (n, m) candidate-event matrix (inf = masked), ties broken by lowest
+    column index. All-masked rows return (inf, 0) — NumPy argmin semantics,
+    the contract all three fleet engines share (docs/DESIGN.md §2)."""
+    t = jnp.min(ev, axis=1)
+    i = jnp.argmin(ev, axis=1).astype(jnp.int32)
+    return t, i
+
+
 def rmsnorm_ref(x, scale, eps: float = 1e-5):
     x32 = x.astype(jnp.float32)
     var = jnp.mean(x32 * x32, axis=-1, keepdims=True)

@@ -74,6 +74,94 @@ def test_ssd_chunk_size_invariance(s, chunk, seed):
                                np.asarray(y2) / scale, atol=2e-4)
 
 
+# ----------------------------------------------- event-select kernel
+from repro.kernels.event_select import event_select_fwd
+
+
+def _es_both(ev, **kw):
+    """Pallas kernel (interpret mode off-TPU) and the jnp oracle."""
+    t, i = event_select_fwd(ev, interpret=True, **kw)
+    rt, ri = ref.event_select_ref(ev)
+    return (np.asarray(t), np.asarray(i)), (np.asarray(rt), np.asarray(ri))
+
+
+@given(n=st.sampled_from([1, 7, 64, 300]), m=st.sampled_from([2, 8, 17]),
+       mask_p=st.floats(0.0, 1.0), seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_event_select_matches_ref_random(n, m, mask_p, seed):
+    """Random event matrices with random inf masking — including rows
+    that come out fully masked — agree with the oracle bit for bit."""
+    rng = np.random.default_rng(seed)
+    ev = rng.uniform(0.0, 1e6, (n, m))
+    ev[rng.random((n, m)) < mask_p] = np.inf
+    (t, i), (rt, ri) = _es_both(jnp.asarray(ev))
+    np.testing.assert_array_equal(t, rt)
+    np.testing.assert_array_equal(i, ri)
+
+
+def test_event_select_all_masked_rows_return_inf_col0():
+    ev = jnp.full((5, 4), jnp.inf)
+    (t, i), (rt, ri) = _es_both(ev)
+    assert np.all(np.isinf(t)) and np.all(i == 0)
+    np.testing.assert_array_equal(t, rt)
+    np.testing.assert_array_equal(i, ri)
+
+
+def test_event_select_ties_break_to_lowest_column():
+    """Exact duplicates of the min must resolve to the lowest column —
+    NumPy argmin semantics, which the engine parity contract pins (a
+    revocation timer beats a join timer at the same instant)."""
+    ev = jnp.asarray([[3.0, 1.0, 1.0, 5.0],
+                     [2.0, 2.0, 2.0, 2.0],
+                     [np.inf, 4.0, np.inf, 4.0]])
+    (t, i), (rt, ri) = _es_both(ev)
+    np.testing.assert_array_equal(i, [1, 0, 1])
+    np.testing.assert_array_equal(t, [1.0, 2.0, 4.0])
+    np.testing.assert_array_equal(i, ri)
+    np.testing.assert_array_equal(t, rt)
+
+
+def test_event_select_minus_inf_sentinel():
+    """-inf (an already-due event) wins every row it appears in and
+    still tie-breaks low; mixed ±inf rows must not poison the min."""
+    ev = jnp.asarray([[-np.inf, 0.0, np.inf],
+                     [np.inf, -np.inf, -np.inf],
+                     [0.5, np.inf, -np.inf]])
+    (t, i), (rt, ri) = _es_both(ev)
+    np.testing.assert_array_equal(t, [-np.inf, -np.inf, -np.inf])
+    np.testing.assert_array_equal(i, [0, 1, 2])
+    np.testing.assert_array_equal(t, rt)
+    np.testing.assert_array_equal(i, ri)
+
+
+@given(n=st.sampled_from([1, 5, 37, 255, 257]), seed=st.integers(0, 20))
+@settings(max_examples=10, deadline=None)
+def test_event_select_row_counts_off_block_boundary(n, seed):
+    """n not a multiple of block_rows exercises the pad path: padded
+    rows are all-inf and must be sliced back off."""
+    rng = np.random.default_rng(seed)
+    ev = jnp.asarray(rng.uniform(0.0, 1.0, (n, 6)))
+    for br in (4, 16, 256):
+        t, i = event_select_fwd(ev, interpret=True, block_rows=br)
+        rt, ri = ref.event_select_ref(ev)
+        assert t.shape == (n,) and i.shape == (n,)
+        np.testing.assert_array_equal(np.asarray(t), np.asarray(rt))
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+
+def test_event_select_dispatch_matches_kernel():
+    """ops.event_select (the engine's entry point) agrees with the
+    explicit kernel whatever backend it dispatched to."""
+    rng = np.random.default_rng(0)
+    ev = rng.uniform(0.0, 10.0, (33, 9))
+    ev[rng.random((33, 9)) < 0.3] = np.inf
+    ev = jnp.asarray(ev)
+    t, i = ops.event_select(ev)
+    kt, ki = event_select_fwd(ev, interpret=True)
+    np.testing.assert_array_equal(np.asarray(t), np.asarray(kt))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ki))
+
+
 @given(seed=st.integers(0, 10))
 @settings(max_examples=6, deadline=None)
 def test_ssd_state_continuity(seed):

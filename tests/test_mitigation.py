@@ -387,13 +387,15 @@ def test_bench_regression_gate(tmp_path):
     mod = importlib.util.module_from_spec(spec)
     spec.loader.exec_module(mod)
 
-    def write(name, speedup, engine_speedup=12.0):
+    def write(name, speedup, engine_speedup=12.0, jit_speedup=6.0):
         p = tmp_path / name
         p.write_text(json.dumps({
             "planner_grid": {"speedup": speedup, "batched_s": 0.01},
             "ensemble": {"traj_per_s": 100.0},
             "batched_engine": {"speedup": engine_speedup,
-                               "traj_per_s": 50000.0}}))
+                               "traj_per_s": 50000.0},
+            "jit_engine": {"speedup": jit_speedup, "traj_per_s": 50000.0,
+                           "devices": 1}}))
         return str(p)
 
     base = write("base.json", 50.0)
@@ -407,7 +409,15 @@ def test_bench_regression_gate(tmp_path):
     assert mod.main(["--baseline", base,
                      "--current", write("eng2.json", 45.0, 10.5),
                      "--min-engine-speedup", "10.0"]) == 0
-    # a current file missing the engine metric fails the gate
+    # ... and so does the jit engine (default floor 5x)
+    assert mod.main(["--baseline", base,
+                     "--current", write("jit.json", 45.0,
+                                        jit_speedup=4.5)]) == 1
+    assert mod.main(["--baseline", base,
+                     "--current", write("jit2.json", 45.0,
+                                        jit_speedup=5.5),
+                     "--min-jit-speedup", "5.0"]) == 0
+    # a current file missing an engine metric fails the gate
     (tmp_path / "noeng.json").write_text(json.dumps({
         "planner_grid": {"speedup": 50.0}, "ensemble": {}}))
     assert mod.main(["--baseline", base,
