@@ -30,6 +30,7 @@ def build_parser() -> argparse.ArgumentParser:
     cli.add_scale_args(t)
     cli.add_batch_args(t)
     cli.add_train_args(t)
+    cli.add_resilience_args(t)
 
     s = sub.add_parser("serve", help="prefill + token-by-token decode")
     cli.add_arch_arg(s)
@@ -43,6 +44,9 @@ def build_parser() -> argparse.ArgumentParser:
         cli.add_arch_arg(q)
         cli.add_scale_args(q)
         cli.add_fleet_args(q)
+        if name in ("plan", "simulate"):
+            # predict is the Eq (4) closed form: no recovery term
+            cli.add_resilience_args(q)
         q.add_argument("--steps", type=int, default=2000)
         q.add_argument("--checkpoint-interval", type=int, default=200)
         # --region defaults to None: `plan` scores every region of the
@@ -100,6 +104,9 @@ def build_parser() -> argparse.ArgumentParser:
     c.add_argument("--compilation-cache-dir", default="",
                    help="persistent XLA compilation cache for the live "
                         "runs (repeat invocations skip re-jit)")
+    # recovery flags arm session.run.resilience, which the chaos runner's
+    # simulated fleets AND live trainer runs inherit (docs/resilience.md)
+    cli.add_resilience_args(c)
 
     b = sub.add_parser("bench", help="paper table/figure benchmark driver")
     b.add_argument("--only", default="",

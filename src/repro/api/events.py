@@ -7,12 +7,26 @@ without threading callbacks through every layer. Kinds emitted today:
   step                {step, loss}
   epoch               {step, kind, member_id, epoch, n_alive}
   checkpoint          {step, sizes}
-  checkpoint_failed   {step, failures}        (chaos ckpt-store outage)
+  checkpoint_failed   {step, failures[, attempts, error]}
+                                              (chaos ckpt-store outage;
+                                               attempts/error appear when a
+                                               resilience retry gave up)
   detection           {step, bottleneck, action, deviation}
   restore             {step}
   mitigation          {step, action, n_ps, grad_compression, ...}
   fault               {step, fault, ...}      (chaos injections)
   handler_error       {kind, handler, error}  (a subscriber raised)
+
+Recovery kinds (resilience enabled — docs/resilience.md):
+
+  retry               {op, attempt, outcome, backoff_s[, error]}
+                                              (outcome: ok|fail|gave_up)
+  restore_fallback    {step, depth, error}    (a corrupt generation skipped)
+  restore_failed      {error}                 (every generation bad: fresh init)
+  lease_handover      {step, holder, revoked_member}
+  degradation         {step, tier, n_alive, roster_size}
+                                              (tier: continue|shrink|pause,
+                                               emitted on transitions only)
 
 Subscribe to a specific kind or to "*" for everything. Handlers run inline
 on the training thread — keep them cheap. A handler that raises is

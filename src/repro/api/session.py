@@ -204,7 +204,8 @@ class Session:
              samples: int = 200,
              n_ps: Optional[int] = None,
              score: str = "eq4",
-             engine: str = "batched"
+             engine: str = "batched",
+             resilience: Optional[object] = None
              ) -> Tuple[LaunchPlan, List[LaunchPlan]]:
         """Revocation-aware (region, launch-hour) planning for this model.
 
@@ -229,6 +230,10 @@ class Session:
         matching what `simulate()`/`predict()` would report for the
         chosen cell; the eq4 score keeps its historic uncapped Σ sp_i
         composition unless `n_ps` is passed.
+
+        `resilience` (default: the session `run.resilience`) is honored
+        under score="sim": the simulated cells price in quorum pauses and
+        restore-retry stalls (docs/resilience.md).
         """
         prov = self._provider(provider)
         # validate (gpu, region) BEFORE the MC sweep so a typo'd region
@@ -253,7 +258,9 @@ class Session:
             score=score, engine=engine, model_bytes=self.model_bytes(),
             # constrain BEFORE scoring: under score="sim" every discarded
             # cell would have cost a full ensemble
-            region=region)
+            region=region,
+            resilience=(self.run.resilience if resilience is None
+                        else resilience))
         return best, plans
 
     # ------------------------------------------------- §VI-A fleet sim
@@ -269,7 +276,8 @@ class Session:
                  start_hour: float = 0.0,
                  samples: int = 1,
                  engine: str = "batched",
-                 chaos: object = None):
+                 chaos: object = None,
+                 resilience: Optional[object] = None):
         """Discrete-event simulation on a transient cluster.
 
         Either a homogeneous (`n_workers` x `gpu`) cluster or an explicit
@@ -296,12 +304,17 @@ class Session:
         `chaos` (a `repro.chaos.FaultTimeline`, or anything honoring its
         interface) scripts faults into the simulated fleet — see
         `Session.chaos` for the scenario-level entry point.
+
+        `resilience` (a `repro.resilience.ResilienceConfig`; default: the
+        session `run.resilience`) arms quorum degradation and
+        restore-retry stalls in the simulated fleet (docs/resilience.md)
+        — identically on every engine.
         """
         sim, n_steps = self._fleet_sim(
             n_workers=n_workers, gpu=gpu, region=region, counts=counts,
             steps=steps, checkpoint_interval=checkpoint_interval, n_ps=n_ps,
             seed=seed, replace=replace, handover=handover,
-            provider=provider, chaos=chaos)
+            provider=provider, chaos=chaos, resilience=resilience)
         if samples > 1:
             return sim.run_many(n_steps, samples, max_hours=max_hours,
                                 start_hour=start_hour, engine=engine)
@@ -315,7 +328,9 @@ class Session:
                    n_ps: int = 1, seed: int = 0, replace: bool = True,
                    handover: bool = True,
                    provider: Optional[object] = None,
-                   chaos: object = None) -> Tuple[FleetSim, int]:
+                   chaos: object = None,
+                   resilience: Optional[object] = None
+                   ) -> Tuple[FleetSim, int]:
         """Construct the configured `FleetSim` (and the resolved step
         budget) without running it — `simulate()`'s builder, shared with
         the chaos runner, which needs the sim object itself for the
@@ -346,7 +361,9 @@ class Session:
             seed=seed, replace=replace, handover=handover,
             price_of={g: prov.price(g) for g in counts}, provider=prov,
             n_tensors=self.n_tensors(),
-            grad_compression=self.run.grad_compression, chaos=chaos)
+            grad_compression=self.run.grad_compression, chaos=chaos,
+            resilience=(self.run.resilience if resilience is None
+                        else resilience))
         return sim, n_steps
 
     # ---------------------------------------------------- chaos scenarios
@@ -441,7 +458,8 @@ class Session:
               ps_model: Optional[PSBottleneckModel] = None,
               workers: Optional[List[WorkerSpec]] = None,
               worker_step_times: Optional[List[float]] = None,
-              clock=None) -> TrainReport:
+              clock=None,
+              resilience: Optional[object] = None) -> TrainReport:
         """Run the transient-aware elastic trainer; profiler + Controller
         observations stream onto `self.bus`.
 
@@ -460,6 +478,11 @@ class Session:
         `clock` (a zero-arg callable returning seconds) replaces the
         profiler's wall clock — the chaos harness injects virtual time so
         detection latency is deterministic across machines.
+        `resilience` (a `repro.resilience.ResilienceConfig`; default: the
+        session `run.resilience`) arms the recovery layer — retried
+        checkpoint saves/restores with checksum validation and
+        generation fallback, retried replacement joins, and quorum-based
+        degradation (docs/resilience.md).
         """
         if mode == "async_ps":
             # the §II emulation has no checkpointing, membership events or
@@ -468,7 +491,8 @@ class Session:
             # relying on
             unsupported = {"events": events, "checkpoint_dir": checkpoint_dir,
                            "predicted_speed": predicted_speed,
-                           "ps_model": ps_model, "workers": workers}
+                           "ps_model": ps_model, "workers": workers,
+                           "resilience": resilience}
             bad = sorted(k for k, v in unsupported.items() if v)
             if bad:
                 raise ValueError(
@@ -501,7 +525,9 @@ class Session:
             members=[Member(i) for i in range(members)], holder=holder,
             predicted_speed=predicted_speed,
             on_event=lambda kind, payload: self.bus.emit(kind, **payload),
-            ps_model=ps_model, workers=workers, clock=clock)
+            ps_model=ps_model, workers=workers, clock=clock,
+            resilience=(run.resilience if resilience is None
+                        else resilience))
         self.trainer = trainer
         # NOTE: `run` (with the resolved checkpoint_dir) lives on the
         # trainer only — per-call overrides never mutate self.run

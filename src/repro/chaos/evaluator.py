@@ -14,7 +14,12 @@ fault spans and scores what the Controller actually did:
 * **wrong actions** — detections whose recommended action is not in the
   covering span's expected set (a PS lever pulled on a straggler, say);
 * **mitigation/checkpoint accounting** — actions applied, checkpoint
-  saves failed during outage spans.
+  saves failed during outage spans;
+* **recovery accounting** — the resilience layer's `retry`,
+  `restore_fallback`, `degradation` and `lease_handover` events
+  (docs/resilience.md) summarized into the `recovery` block: attempts,
+  backoff seconds slept, exhausted retries, fallback restores and
+  degradation-tier transitions (all zero when resilience is off).
 
 Spans whose kind has an empty expected-action set (checkpoint outages:
 nothing speed-visible to detect) do not count toward detection scoring.
@@ -48,6 +53,10 @@ def score_history(history: Iterable[Tuple[str, dict]],
     mitigations = [p for k, p in history if k == "mitigation"]
     ckpt_failed = [p for k, p in history if k == "checkpoint_failed"]
     faults_seen = [p for k, p in history if k == "fault"]
+    retry_ev = [p for k, p in history if k == "retry"]
+    fallbacks = [p for k, p in history if k == "restore_fallback"]
+    degradations = [p for k, p in history if k == "degradation"]
+    handovers = [p for k, p in history if k == "lease_handover"]
 
     def covering(step: float) -> Optional[dict]:
         for span in truth:
@@ -99,4 +108,16 @@ def score_history(history: Iterable[Tuple[str, dict]],
         "actions_applied": [m["action"] for m in mitigations],
         "checkpoint_failures": len(ckpt_failed),
         "faults_injected": len(faults_seen),
+        "recovery": {
+            "retry_attempts": len(retry_ev),
+            "retried": sum(1 for p in retry_ev
+                           if p.get("outcome") == "fail"),
+            "gave_up": sum(1 for p in retry_ev
+                           if p.get("outcome") == "gave_up"),
+            "backoff_seconds": round(sum(p.get("backoff_s", 0.0)
+                                         for p in retry_ev), 6),
+            "restore_fallbacks": len(fallbacks),
+            "degradation_tiers": [p.get("tier") for p in degradations],
+            "lease_handovers": len(handovers),
+        },
     }

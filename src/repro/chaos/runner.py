@@ -64,7 +64,12 @@ def _ens_summary(ens) -> Dict[str, float]:
             "revocations_mean": ens.stats.revocations_mean,
             "replacements_mean": ens.stats.replacements_mean,
             "lost_steps_mean": round(lost, 6),
-            "finished": ens.stats.finished}
+            "finished": ens.stats.finished,
+            # recovery cost (zeros unless resilience is armed)
+            "paused_s_mean": round(float(np.mean(
+                [r.paused_s for r in ens.results])), 6),
+            "restore_delay_s_mean": round(float(np.mean(
+                [r.restore_delay_s for r in ens.results])), 6)}
 
 
 def _run_sim(session, sc: Scenario, engine: str, samples: int,
@@ -197,7 +202,7 @@ def _run_live(session, sc: Scenario, seed: int) -> Dict[str, object]:
     history = [(e.kind, e.payload) for e in child.bus.history]
     score = score_history(history, plan.truth(),
                           grace=2 * plan.check_every)
-    return {
+    out = {
         "n_steps": rep.steps_run,
         "virtual_seconds": round(clock.t, 6),
         "predicted_speed": predicted,
@@ -206,6 +211,41 @@ def _run_live(session, sc: Scenario, seed: int) -> Dict[str, object]:
         "faults": rep.faults,
         **score,
     }
+    if child.run.resilience is not None:
+        # recovery scorecard (docs/resilience.md): the trainer's own
+        # counters plus a post-run fallback drill — corrupt the newest
+        # committed checkpoint and require the validated restore to land
+        # on the previous good generation, never on torn state
+        out["recovery"] = {**score["recovery"],
+                           "retries": rep.retries,
+                           "recovered_saves": rep.recovered_saves,
+                           "save_failures": rep.checkpoint_failures,
+                           "fallback_depth": rep.fallback_depth,
+                           "paused_steps": rep.paused_steps,
+                           "fallback_drill": _fallback_drill(child.trainer)}
+    return out
+
+
+def _fallback_drill(trainer) -> Dict[str, object]:
+    """Corrupt the newest checkpoint on disk and prove
+    `restore_latest_valid` falls back to the previous valid generation
+    (the zero-torn-state-loads guarantee, exercised end-to-end)."""
+    import jax
+
+    steps = trainer.ckpt.all_steps()
+    if len(steps) < 2:
+        return {"ok": None, "reason": f"{len(steps)} checkpoint(s) on "
+                                      "disk; drill needs 2"}
+    trainer.ckpt.corrupt(steps[-1])
+    shapes = jax.eval_shape(trainer.init_state, None)
+    try:
+        _tree, got, depth = trainer.ckpt.restore_latest_valid(shapes)
+    except Exception as exc:  # noqa: BLE001 — scored, not raised
+        return {"ok": False, "corrupted_step": steps[-1],
+                "error": f"{type(exc).__name__}: {exc}"}
+    return {"ok": bool(got == steps[-2] and depth >= 1),
+            "corrupted_step": steps[-1], "restored_step": got,
+            "fallback_depth": depth}
 
 
 def _check_expectations(sc: Scenario, card: Dict[str, object]) -> List[str]:
@@ -233,6 +273,17 @@ def _check_expectations(sc: Scenario, card: Dict[str, object]) -> List[str]:
     gate("min_extra_lost_steps", lambda v: imp["extra_lost_steps"] >= v,
          f"got {imp['extra_lost_steps']}")
 
+    if card.get("resilience_armed"):
+        # resilient_* gates fire only when the run was armed with a
+        # ResilienceConfig (the plain CI chaos sweep skips them)
+        fs = sim["faulted"]
+        gate("resilient_min_paused_s",
+             lambda v: fs["paused_s_mean"] >= v,
+             f"got {fs['paused_s_mean']}")
+        gate("resilient_min_restore_delay_s",
+             lambda v: fs["restore_delay_s_mean"] >= v,
+             f"got {fs['restore_delay_s_mean']}")
+
     live = card.get("live")
     if live is None:        # live gates only apply when the live run ran
         return fails
@@ -254,6 +305,23 @@ def _check_expectations(sc: Scenario, card: Dict[str, object]) -> List[str]:
     gate("live_min_ckpt_failures",
          lambda v: live["checkpoint_failures"] >= v,
          f"got {live['checkpoint_failures']}")
+    rec = live.get("recovery")
+    if card.get("resilience_armed") and rec is not None:
+        gate("resilient_live_min_retries",
+             lambda v: rec["retries"] >= v, f"got {rec['retries']}")
+        gate("resilient_live_min_recovered_saves",
+             lambda v: rec["recovered_saves"] >= v,
+             f"got {rec['recovered_saves']}")
+        gate("resilient_drill_ok",
+             lambda v: (not v) or rec["fallback_drill"]["ok"] is True,
+             f"got {rec['fallback_drill']}")
+        # a silent save failure would show as checkpoint_failed events
+        # without matching gave_up retry records — require the ledger to
+        # balance whenever any save failed
+        if rec["save_failures"] > rec["gave_up"]:
+            fails.append("recovery ledger: "
+                         f"{rec['save_failures']} save failure(s) but only "
+                         f"{rec['gave_up']} exhausted-retry record(s)")
     return fails
 
 
@@ -266,6 +334,7 @@ def run_scenario(sc: Scenario, *, session=None, engine: str = "batched",
         session = Session.from_arch("qwen3-1.7b", smoke=True)
     card: Dict[str, object] = {
         "scenario": sc.name, "description": sc.description, "seed": seed,
+        "resilience_armed": session.run.resilience is not None,
         "sim": _run_sim(session, sc, engine, samples, seed),
         "live": (_run_live(session, sc, seed)
                  if live and sc.live is not None else None),

@@ -136,7 +136,10 @@ def regional_wave() -> Scenario:
                     "+6/h revocation hazard on every worker in the region",
         faults=(PreemptionWave(0.5, 1.0, 6.0, region="us-central1"),),
         provider="gcp", region="us-central1",
-        expect={"min_extra_revocations": 1.0, "min_extra_time_s": 60.0})
+        expect={"min_extra_revocations": 1.0, "min_extra_time_s": 60.0,
+                # armed runs (--quorum 0.75): the wave must push the fleet
+                # below quorum long enough to register real pause time
+                "resilient_min_paused_s": 60.0})
 
 
 @register_scenario
@@ -225,7 +228,14 @@ def ckpt_outage() -> Scenario:
             faults=(LiveFault(20, "ckpt_outage"),
                     LiveFault(45, "ckpt_recover"))),
         expect={"live_min_ckpt_failures": 3,
-                "live_max_false_alarms": 0})
+                "live_max_false_alarms": 0,
+                # armed runs (--retry-attempts 4): saves inside the outage
+                # must be retried, at least one must recover on a later
+                # attempt, and the post-run corruption drill must restore
+                # from the previous valid generation (no torn-state loads)
+                "resilient_live_min_retries": 5,
+                "resilient_live_min_recovered_saves": 1,
+                "resilient_drill_ok": True})
 
 
 @register_scenario

@@ -4,7 +4,7 @@ Layout per checkpoint (mirrors TF's data/index/meta triple — the sizes feed
 the §IV prediction models):
     step_<N>/
       data-00000.bin     array payload, concatenated           (S_d)
-      index.json         leaf -> (offset, shape, dtype) map     (S_i)
+      index.json         leaf -> (offset, shape, dtype, crc32)  (S_i)
       meta.json          pytree structure + user metadata       (S_m)
     LATEST               atomic pointer to the newest committed step
     writer.lease         checkpoint-writer lease (chief handover, §V-E)
@@ -27,10 +27,21 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Dict, Optional, Tuple
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A committed checkpoint failed integrity validation (missing file,
+    short payload, or per-array checksum mismatch)."""
+
+
+class LeaseLostError(RuntimeError):
+    """The writer lease was lost between starting a save and committing
+    it; the commit was aborted so no torn/contested state was published."""
 
 
 @dataclasses.dataclass
@@ -46,12 +57,21 @@ class CheckpointSizes:
 
 class WriterLease:
     """File-based lease: holder writes {holder, expires}; others may steal
-    after expiry or an explicit revocation notification."""
+    after expiry or an explicit revocation notification.
 
-    def __init__(self, root: str, holder: str, ttl_s: float = 60.0):
+    `clock` is injectable (default `time.time`) so chaos `VirtualClock`
+    scenarios exercise expiry and steal races deterministically instead
+    of sleeping. Acquisition is verified by reading back the committed
+    lease file: under a steal race both contenders pass the pre-check,
+    but only the one whose rename landed last actually holds the lease.
+    """
+
+    def __init__(self, root: str, holder: str, ttl_s: float = 60.0,
+                 clock: Callable[[], float] = time.time):
         self.path = os.path.join(root, "writer.lease")
         self.holder = holder
         self.ttl = ttl_s
+        self.clock = clock
 
     def _read(self) -> Optional[dict]:
         try:
@@ -61,17 +81,20 @@ class WriterLease:
             return None
 
     def try_acquire(self, now: Optional[float] = None) -> bool:
-        now = time.time() if now is None else now
+        now = self.clock() if now is None else now
         cur = self._read()
         if cur is not None and cur["holder"] != self.holder \
                 and cur["expires"] > now and not cur.get("revoked"):
             return False
-        tmp = self.path + ".tmp"
+        # per-holder tmp name: two stealers racing must not truncate each
+        # other's in-flight write before the atomic rename
+        tmp = f"{self.path}.tmp.{self.holder}"
         with open(tmp, "w") as f:
             json.dump({"holder": self.holder, "expires": now + self.ttl,
                        "revoked": False}, f)
         os.replace(tmp, self.path)
-        return True
+        cur = self._read()
+        return cur is not None and cur.get("holder") == self.holder
 
     def renew(self, now: Optional[float] = None) -> bool:
         cur = self._read()
@@ -81,7 +104,7 @@ class WriterLease:
 
     def held_by_me(self, now: Optional[float] = None) -> bool:
         cur = self._read()
-        now = time.time() if now is None else now
+        now = self.clock() if now is None else now
         return (cur is not None and cur["holder"] == self.holder
                 and cur["expires"] > now and not cur.get("revoked"))
 
@@ -107,10 +130,11 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
 
 class Checkpointer:
     def __init__(self, root: str, holder: str = "worker-0",
-                 async_write: bool = False, keep: int = 3):
+                 async_write: bool = False, keep: int = 3,
+                 clock: Callable[[], float] = time.time):
         self.root = root
         os.makedirs(root, exist_ok=True)
-        self.lease = WriterLease(root, holder)
+        self.lease = WriterLease(root, holder, clock=clock)
         self.async_write = async_write
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
@@ -128,15 +152,16 @@ class Checkpointer:
         if self.async_write:
             self.wait()
             self._thread = threading.Thread(
-                target=self._write, args=(step, flat, metadata or {}))
+                target=self._write,
+                args=(step, flat, metadata or {}, require_lease))
             self._thread.start()
             return None
-        sizes = self._write(step, flat, metadata or {})
+        sizes = self._write(step, flat, metadata or {}, require_lease)
         self.last_save_seconds = time.monotonic() - t0
         return sizes
 
     def _write(self, step: int, flat: Dict[str, np.ndarray],
-               metadata: dict) -> CheckpointSizes:
+               metadata: dict, fenced: bool = False) -> CheckpointSizes:
         tmp = os.path.join(self.root, f".tmp_step_{step}")
         final = os.path.join(self.root, f"step_{step}")
         shutil.rmtree(tmp, ignore_errors=True)
@@ -150,7 +175,8 @@ class Checkpointer:
                 buf = arr.tobytes()
                 index[key] = {"offset": offset, "nbytes": len(buf),
                               "shape": list(arr.shape),
-                              "dtype": str(arr.dtype)}
+                              "dtype": str(arr.dtype),
+                              "crc": zlib.crc32(buf) & 0xFFFFFFFF}
                 f.write(buf)
                 offset += len(buf)
         with open(os.path.join(tmp, "index.json"), "w") as f:
@@ -159,6 +185,13 @@ class Checkpointer:
                 "created": time.time(), **metadata}
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump(meta, f)
+        if fenced and not self.lease.held_by_me():
+            # the lease was stolen (holder revoked mid-save): abort before
+            # the rename so the contested write never becomes visible
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise LeaseLostError(
+                f"{self.lease.holder} lost writer.lease during save of "
+                f"step {step}; commit aborted")
         shutil.rmtree(final, ignore_errors=True)
         os.replace(tmp, final)
         with open(os.path.join(self.root, "LATEST.tmp"), "w") as f:
@@ -185,19 +218,34 @@ class Checkpointer:
 
     # --------------------------------------------------------------- restore
     def all_steps(self):
+        """Committed step numbers, hardened against stray entries: only
+        directories named exactly ``step_<int>`` count — a leftover
+        ``step_backup`` file or half-written ``.tmp_step_*`` dir must
+        never break restore-or-init."""
         out = []
         for name in os.listdir(self.root):
-            if name.startswith("step_"):
-                out.append(int(name.split("_")[1]))
+            if not name.startswith("step_"):
+                continue
+            tail = name[len("step_"):]
+            if not tail.isdigit():
+                continue
+            if not os.path.isdir(os.path.join(self.root, name)):
+                continue
+            out.append(int(tail))
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
         try:
             with open(os.path.join(self.root, "LATEST")) as f:
-                return int(f.read().strip())
+                step = int(f.read().strip())
+            # a stale pointer (step dir GC'd or lost) falls through to the
+            # newest committed directory instead of a doomed restore
+            if step in steps:
+                return step
         except (FileNotFoundError, ValueError):
-            steps = self.all_steps()
-            return steps[-1] if steps else None
+            pass
+        return steps[-1] if steps else None
 
     def read_meta(self, step: Optional[int] = None) -> dict:
         """The meta.json of a committed checkpoint (structure + user
@@ -236,3 +284,76 @@ class Checkpointer:
                               if hasattr(leaf, "dtype") else arr)
         tree = jax.tree_util.tree_unflatten(leaves_paths[1], new_leaves)
         return tree, step
+
+    # ------------------------------------------------------------- integrity
+    def validate(self, step: int) -> None:
+        """Raise `CheckpointCorruptError` unless ``step_<step>`` is a
+        complete, checksum-clean checkpoint: index/meta parse, the data
+        payload covers every recorded extent, and each array's crc32
+        matches (entries written before checksums existed get the extent
+        check only)."""
+        d = os.path.join(self.root, f"step_{step}")
+        try:
+            with open(os.path.join(d, "index.json")) as f:
+                index = json.load(f)
+            with open(os.path.join(d, "meta.json")) as f:
+                json.load(f)
+            with open(os.path.join(d, "data-00000.bin"), "rb") as f:
+                blob = f.read()
+        except (FileNotFoundError, NotADirectoryError,
+                json.JSONDecodeError) as exc:
+            raise CheckpointCorruptError(
+                f"step {step}: unreadable checkpoint ({exc})") from exc
+        for key, rec in index.items():
+            end = rec["offset"] + rec["nbytes"]
+            if end > len(blob):
+                raise CheckpointCorruptError(
+                    f"step {step}: torn payload — {key} needs bytes "
+                    f"[{rec['offset']}, {end}) of {len(blob)}")
+            if "crc" in rec:
+                got = zlib.crc32(blob[rec["offset"]:end]) & 0xFFFFFFFF
+                if got != rec["crc"]:
+                    raise CheckpointCorruptError(
+                        f"step {step}: checksum mismatch on {key} "
+                        f"(stored {rec['crc']:#010x}, got {got:#010x})")
+
+    def restore_latest_valid(self, tree_like,
+                             on_fallback=None) -> Tuple[Any, int, int]:
+        """Restore from the newest checkpoint that passes `validate`,
+        falling back generation by generation past torn or corrupt ones
+        instead of crashing or silently loading bad state. Returns
+        ``(tree, step, depth)`` where ``depth`` counts skipped
+        generations (0 = the latest was clean); ``on_fallback(step,
+        error)`` is called for each one skipped. Raises
+        `FileNotFoundError` when no checkpoint exists at all and
+        `CheckpointCorruptError` when every one is damaged."""
+        steps: List[int] = self.all_steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoint under {self.root}")
+        errors: List[str] = []
+        latest = self.latest_step()
+        # LATEST first, then the remaining committed steps newest-first
+        order = [latest] + [s for s in sorted(steps, reverse=True)
+                            if s != latest]
+        for depth, step in enumerate(order):
+            try:
+                self.validate(step)
+                tree, got = self.restore(tree_like, step=step)
+                return tree, got, depth
+            except CheckpointCorruptError as exc:
+                errors.append(str(exc))
+                if on_fallback is not None:
+                    on_fallback(step, exc)
+        raise CheckpointCorruptError(
+            "every committed checkpoint failed validation: "
+            + "; ".join(errors))
+
+    def corrupt(self, step: int, nbytes: int = 16) -> None:
+        """Test/chaos hook: flip the first `nbytes` of a committed step's
+        payload in place, simulating a torn or bit-rotted write that the
+        checksum fallback must detect and skip."""
+        path = os.path.join(self.root, f"step_{step}", "data-00000.bin")
+        with open(path, "r+b") as f:
+            head = f.read(nbytes)
+            f.seek(0)
+            f.write(bytes(b ^ 0xFF for b in head))

@@ -233,3 +233,7 @@ class RunConfig:
     # persistent JAX compilation cache directory ("" = disabled): repeated
     # Sessions/processes over the same step skip XLA recompilation
     compilation_cache_dir: str = ""
+    # recovery policies (repro.resilience.ResilienceConfig; None = the
+    # pre-resilience fail-fast behavior). Steers the outer training loop
+    # and the fleet simulators, never the traced step function.
+    resilience: Optional[object] = None

@@ -59,11 +59,13 @@ def clear() -> None:
 def normalized_run(run) -> object:
     """A RunConfig with the trace-irrelevant fields zeroed, for keying:
     checkpoint_dir/interval steer the outer loop, seed steers data, the
-    compilation-cache dir steers XLA's disk cache — none of them reach
-    the jitted step function."""
+    compilation-cache dir steers XLA's disk cache, resilience policies
+    steer retries around the step — none of them reach the jitted step
+    function."""
     return dataclasses.replace(run, checkpoint_dir="",
                                checkpoint_interval=0, seed=0,
-                               compilation_cache_dir="")
+                               compilation_cache_dir="",
+                               resilience=None)
 
 
 _PERSISTENT_DIR = None

@@ -121,7 +121,8 @@ def plan_launch(gpu: str, n_workers: int, worker_speed: float,
                 replace: bool = True,
                 handover: bool = True,
                 max_sim_hours: Optional[float] = None,
-                region: Optional[str] = None
+                region: Optional[str] = None,
+                resilience: object = None
                 ) -> Tuple[LaunchPlan, List[LaunchPlan]]:
     """Scores all (region, hour) cells of one provider; returns (best, all).
 
@@ -166,6 +167,12 @@ def plan_launch(gpu: str, n_workers: int, worker_speed: float,
     `region` (optional) constrains the sweep to one region BEFORE any
     cell is scored — under score="sim" every discarded cell would have
     cost a full ensemble.
+
+    `resilience` (a `repro.resilience.ResilienceConfig`) is honored under
+    score="sim" only: the simulated fleets apply its quorum degradation
+    and restore-retry stalls (docs/resilience.md), so a plan made for a
+    resilient run prices the recovery time in. The eq4 closed form has no
+    recovery term and ignores it.
     """
     from repro.providers import get_provider
     if samples < 1:
@@ -203,7 +210,7 @@ def plan_launch(gpu: str, n_workers: int, worker_speed: float,
             model_gflops, samples, ps, engine, model_bytes, replace,
             handover,
             max_sim_hours if max_sim_hours is not None
-            else max(48.0, 6.0 * base_s / 3600.0), regions)
+            else max(48.0, 6.0 * base_s / 3600.0), regions, resilience)
         best = min(plans, key=lambda p: (p.expected_cost, p.expected_time_s))
         return best, plans
     horizon0 = min(base_s / 3600.0, prov.max_lifetime_hours)
@@ -236,7 +243,7 @@ def plan_launch(gpu: str, n_workers: int, worker_speed: float,
 def _sim_scored_grid(gpu, n_workers, worker_speed, n_w, i_c, t_c, hours,
                      seed, prov, model_gflops, samples, ps, engine,
                      model_bytes, replace, handover, max_sim_hours,
-                     regions) -> List[LaunchPlan]:
+                     regions, resilience=None) -> List[LaunchPlan]:
     """One batched fleet-simulation ensemble per (region, hour) cell —
     the simulation-backed §V-C planner the lockstep engine makes routine
     (10k+ trajectories per sweep stay sub-second)."""
@@ -257,7 +264,8 @@ def _sim_scored_grid(gpu, n_workers, worker_speed, n_w, i_c, t_c, hours,
                 grad_compression=ps.compression if ps is not None
                 else "none",
                 seed=seed, replace=replace, handover=handover,
-                price_of={gpu: prov.price(gpu)}, provider=prov)
+                price_of={gpu: prov.price(gpu)}, provider=prov,
+                resilience=resilience)
             ens = sim.run_many(n_w, samples, max_hours=max_sim_hours,
                                start_hour=float(h), engine=engine)
             st = ens.stats

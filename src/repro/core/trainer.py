@@ -24,7 +24,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import Checkpointer
+from repro.checkpoint.checkpointer import CheckpointCorruptError
 from repro.configs.base import ModelConfig, RunConfig
+from repro.resilience import (ResilienceConfig, RetryExhausted,
+                              call_with_retries)
 from repro.core import jit_cache
 from repro.core.controller import Action, Controller, Detection
 from repro.core.perf_model.cluster_model import (PSBottleneckModel,
@@ -62,6 +65,12 @@ class TrainReport:
     checkpoint_failures: int = 0
     #: chaos faults injected mid-run (see `inject_fault` payloads)
     faults: List[dict] = dataclasses.field(default_factory=list)
+    #: recovery accounting (resilience enabled; docs/resilience.md)
+    retries: int = 0                    # backoff retries beyond attempt 1
+    recovered_saves: int = 0            # saves that landed after failures
+    fallback_depth: int = 0             # checkpoint generations skipped
+    paused_steps: int = 0               # step slots skipped below quorum
+    degradations: List[dict] = dataclasses.field(default_factory=list)
 
 
 class TransientTrainer:
@@ -75,7 +84,8 @@ class TransientTrainer:
                  auto_mitigate: bool = True,
                  mitigation_scheme: str = "int8",
                  max_mitigations: int = 8,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 resilience: Optional[ResilienceConfig] = None):
         self.cfg = cfg
         self.run = run
         self.loader = loader
@@ -85,7 +95,10 @@ class TransientTrainer:
         self.profiler = PerformanceProfiler(window=10, warmup_steps=5,
                                             warmup_seconds=0.0)
         self.controller = Controller()
-        self.ckpt = Checkpointer(run.checkpoint_dir, holder=holder)
+        # the writer lease shares the trainer's clock, so chaos
+        # VirtualClock scenarios exercise lease expiry without sleeping
+        self.ckpt = Checkpointer(run.checkpoint_dir, holder=holder,
+                                 clock=clock or time.time)
         self.predicted_speed = predicted_speed
         # §VI-B mitigation loop state: a PS capacity model + worker specs
         # let the controller attribute a slowdown to PS saturation and let
@@ -110,6 +123,17 @@ class TransientTrainer:
         self.faults: List[dict] = []
         self.restores = 0
         self.mitigations: List[dict] = []
+        # recovery layer (docs/resilience.md): None keeps every legacy
+        # code path byte-identical
+        self.resilience = resilience
+        # under a virtual clock a backoff sleep must not block the host
+        self._sleep: Callable[[float], None] = (
+            (lambda s: None) if clock is not None else time.sleep)
+        self.retries = 0
+        self.recovered_saves = 0
+        self.fallback_depth = 0
+        self.paused_steps = 0
+        self.degradations: List[dict] = []
         self._rebuild_step()
         self.detections: List[Detection] = []
 
@@ -155,7 +179,7 @@ class TransientTrainer:
         shapes = jax.eval_shape(self.init_state, key)
         try:
             try:
-                state, step = self.ckpt.restore(shapes)
+                state, step = self._restore_validated(shapes)
                 residual = state.residual
             except KeyError:
                 # checkpoint predates compression (no residual leaves):
@@ -174,6 +198,42 @@ class TransientTrainer:
                                  jnp.asarray(step, jnp.int32), residual), step
         except FileNotFoundError:
             return self.init_state(key), 0
+        except CheckpointCorruptError as exc:
+            # every committed generation failed validation: surface it and
+            # restart clean rather than load torn state
+            self._emit("restore_failed", {"error": str(exc)})
+            return self.init_state(key), 0
+
+    def _restore_validated(self, shapes):
+        """Restore under the resilience policy: retry the read, validate
+        checksums, and fall back generation-by-generation past torn or
+        corrupt checkpoints (``restore_fallback`` events record each skip).
+        With resilience disabled this is the legacy strict restore."""
+        res = self.resilience
+        if res is None:
+            return self.ckpt.restore(shapes)
+
+        def on_fallback(step, exc):
+            self.fallback_depth += 1
+            self._emit("restore_fallback", {"step": step,
+                                            "depth": self.fallback_depth,
+                                            "error": str(exc)})
+
+        def attempt():
+            tree, step, _depth = self.ckpt.restore_latest_valid(
+                shapes, on_fallback=on_fallback)
+            return tree, step
+
+        try:
+            (tree, step), attempts = call_with_retries(
+                attempt, res.retry, op="restore", seed=self.run.seed,
+                key=-1, sleep=self._sleep, emit=self._emit,
+                retry_on=(CheckpointCorruptError,))
+        except RetryExhausted as exc:
+            self.retries += exc.attempts - 1
+            raise exc.last
+        self.retries += attempts - 1
+        return tree, step
 
     # ------------------------------------------------------------------- run
     def run_steps(self, state: st.TrainState, n_steps: int,
@@ -185,6 +245,9 @@ class TransientTrainer:
         checkpoints = 0
         t0 = time.monotonic()
         start_step = int(state.step)
+        steps_run = 0
+        base_global_batch = self.loader.global_batch
+        tier = "continue"
         for local in range(n_steps):
             step = start_step + local
             # 1. membership events at this step boundary
@@ -200,23 +263,53 @@ class TransientTrainer:
                     # revoked writer: lease handover (Fig 11 fix)
                     if not self.ckpt.lease.held_by_me():
                         self.ckpt.lease.notify_revoked()
-                        self.ckpt.lease.try_acquire()
+                        if self.ckpt.lease.try_acquire():
+                            self._emit("lease_handover",
+                                       {"step": step,
+                                        "holder": self.ckpt.lease.holder,
+                                        "revoked_member": ev.member_id})
                 else:
                     if ev.member_id in self.members:
                         continue  # stale join (already present)
-                    epoch = self.members.join(Member(ev.member_id, ev.gpu))
+                    epoch = self._join_member(ev)
                 self._emit("epoch", {"step": step, "kind": ev.kind,
                                      "member_id": ev.member_id,
                                      "epoch": epoch.number,
                                      "n_alive": len(epoch.members)})
                 if not epoch.members:
                     raise RuntimeError("all members revoked")
+            # 1b. quorum degradation tier (docs/resilience.md): pause skips
+            # this step slot entirely (future joins can restore quorum),
+            # shrink temporarily scales the global batch down
+            new_tier = ("continue" if self.resilience is None else
+                        self.resilience.degradation.tier(
+                            self.members.n_alive, self.members.roster_size))
+            if new_tier != tier:
+                tier = new_tier
+                record = {"step": step, "tier": tier,
+                          "n_alive": self.members.n_alive,
+                          "roster_size": self.members.roster_size}
+                self.degradations.append(record)
+                self._emit("degradation", record)
+            if tier == "pause":
+                self.paused_steps += 1
+                if ev_i >= len(events):
+                    break  # no future join can restore quorum
+                continue
+            if tier == "shrink_batch":
+                self.loader.global_batch = max(
+                    self.members.n_alive,
+                    int(round(base_global_batch
+                              * self.resilience.degradation.shrink_factor)))
+            else:
+                self.loader.global_batch = base_global_batch
             # 2. data (global batch stays constant across membership changes)
             n_shards = max(1, self.members.n_alive)
             batch_np = self.loader.next_global(n_shards)
             batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
             # 3. step
             state, metrics = self._jit_step(state, batch)
+            steps_run += 1
             loss = float(metrics["loss"])
             losses.append(loss)
             payload = {"step": step, "loss": loss}
@@ -251,32 +344,85 @@ class TransientTrainer:
             # 5. checkpoint
             if self.run.checkpoint_interval and \
                     (step + 1) % self.run.checkpoint_interval == 0:
-                if self.ckpt_outage:
-                    # chaos checkpoint-store outage: the save fails fast
-                    # and the run continues on its last good checkpoint
-                    self.ckpt_failures += 1
-                    self._emit("checkpoint_failed",
-                               {"step": step + 1,
-                                "failures": self.ckpt_failures})
-                else:
-                    sizes = self.ckpt.save(
-                        step + 1, state,
-                        metadata={**self.loader.state(),
-                                  "grad_compression":
-                                  self.run.grad_compression})
-                    if sizes is not None:
-                        checkpoints += 1
-                        self._emit("checkpoint", {"step": step + 1,
-                                                  "sizes": sizes})
+                checkpoints += self._save_checkpoint(step + 1, state)
+        self.loader.global_batch = base_global_batch
         report = TrainReport(
-            steps_run=n_steps, final_loss=losses[-1] if losses else float("nan"),
+            steps_run=steps_run,
+            final_loss=losses[-1] if losses else float("nan"),
             losses=losses, speed=self.profiler.speed(),
             epochs=self.members.epoch_no + 1, checkpoints=checkpoints,
             restores=self.restores, detections=self.detections,
             wall_seconds=time.monotonic() - t0,
             mitigations=self.mitigations,
-            checkpoint_failures=self.ckpt_failures, faults=self.faults)
+            checkpoint_failures=self.ckpt_failures, faults=self.faults,
+            retries=self.retries, recovered_saves=self.recovered_saves,
+            fallback_depth=self.fallback_depth,
+            paused_steps=self.paused_steps, degradations=self.degradations)
         return state, report
+
+    def _join_member(self, ev: "MembershipEvent"):
+        """Replacement join, retried under the resilience policy: a join
+        that races a membership epoch roll is transient, so it gets the
+        same bounded backoff as a checkpoint save."""
+        join = lambda: self.members.join(Member(ev.member_id, ev.gpu))
+        if self.resilience is None:
+            return join()
+        epoch, attempts = call_with_retries(
+            join, self.resilience.retry, op="join", seed=self.run.seed,
+            key=ev.member_id, sleep=self._sleep, emit=self._emit,
+            retry_on=(RuntimeError,))
+        self.retries += attempts - 1
+        return epoch
+
+    def _save_checkpoint(self, step: int, state) -> int:
+        """One interval save. Legacy path (no resilience): an outage
+        fails fast and silently drops the save. Resilience path: the save
+        is retried under the policy (``retry`` events per attempt); only
+        once attempts/deadline are exhausted does it count as a
+        ``checkpoint_failed`` — and that event carries the attempt count,
+        so no failure is silent. Returns 1 if a checkpoint committed."""
+        metadata = {**self.loader.state(),
+                    "grad_compression": self.run.grad_compression}
+        if self.resilience is None:
+            if self.ckpt_outage:
+                # chaos checkpoint-store outage: the save fails fast
+                # and the run continues on its last good checkpoint
+                self.ckpt_failures += 1
+                self._emit("checkpoint_failed",
+                           {"step": step, "failures": self.ckpt_failures})
+                return 0
+            sizes = self.ckpt.save(step, state, metadata=metadata)
+            if sizes is None:
+                return 0
+            self._emit("checkpoint", {"step": step, "sizes": sizes})
+            return 1
+
+        def attempt():
+            if self.ckpt_outage:
+                raise OSError("checkpoint store unavailable (ckpt_outage)")
+            return self.ckpt.save(step, state, metadata=metadata)
+
+        had_failures = self.ckpt_failures > 0
+        try:
+            sizes, attempts = call_with_retries(
+                attempt, self.resilience.retry, op="checkpoint_save",
+                seed=self.run.seed, key=step, sleep=self._sleep,
+                emit=self._emit)
+        except RetryExhausted as exc:
+            self.retries += exc.attempts - 1
+            self.ckpt_failures += 1
+            self._emit("checkpoint_failed",
+                       {"step": step, "failures": self.ckpt_failures,
+                        "attempts": exc.attempts,
+                        "error": type(exc.last).__name__})
+            return 0
+        self.retries += attempts - 1
+        if sizes is None:
+            return 0
+        if attempts > 1 or had_failures:
+            self.recovered_saves += 1
+        self._emit("checkpoint", {"step": step, "sizes": sizes})
+        return 1
 
     # ---------------------------------------------------- chaos injection
     def inject_fault(self, kind: str, step: int = 0, **payload) -> None:

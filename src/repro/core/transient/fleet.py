@@ -53,6 +53,10 @@ class SimResult:
     monetary_cost: float
     provider: str = "gcp"
     region: str = ""
+    #: quorum-pause wall-clock (resilience degradation; docs/resilience.md)
+    paused_s: float = 0.0
+    #: restore-retry stall wall-clock after stock-chief revocations
+    restore_delay_s: float = 0.0
 
 
 def _percentiles(xs: List[float]) -> Tuple[float, float, float]:
@@ -149,7 +153,8 @@ class FleetSim:
                  n_ps: int = 1, seed: int = 0, replace: bool = True,
                  handover: bool = True, price_of: Optional[Dict] = None,
                  provider: object = "gcp", n_tensors: int = 0,
-                 grad_compression: str = "none", chaos: object = None):
+                 grad_compression: str = "none", chaos: object = None,
+                 resilience: object = None):
         from repro.providers import get_provider
         self.workers = {w.wid: w for w in workers}
         if workers:
@@ -181,6 +186,11 @@ class FleetSim:
         # hazard faults transform the FleetDraws lifetime streams, while
         # speed/PS/ckpt faults make the cluster piecewise-time-varying
         self.chaos = chaos
+        # a repro.resilience.ResilienceConfig (or None): quorum-tier
+        # degradation gates effective speed, and stock-chief restores
+        # stall for the keyed retry schedule — honored identically by
+        # all three engines (docs/resilience.md)
+        self.resilience = resilience
 
     def _respawn(self, seed: int) -> "FleetSim":
         """A fresh simulator over the same launch roster and physics, with
@@ -196,7 +206,7 @@ class FleetSim:
                         handover=self.handover, price_of=self.price_of,
                         provider=self.provider, n_tensors=self.n_tensors,
                         grad_compression=self.grad_compression,
-                        chaos=self.chaos)
+                        chaos=self.chaos, resilience=self.resilience)
 
     def _cluster_speed(self, t: Optional[float] = None) -> float:
         """Cluster steps/s; with a chaos timeline and a sim clock `t`,
@@ -255,6 +265,31 @@ class FleetSim:
         # wid -> (roster slot, generation) for the shared-draws contract
         slot_of: Dict[int, Tuple[int, int]] = {
             w.wid: (idx, 0) for idx, w in enumerate(self.workers.values())}
+        # resilience (docs/resilience.md): restore-retry stalls keyed on
+        # (seed, traj, slot, gen) — through the shared draws when present
+        # (parity with the batched/jit engines), else a local n=1 pool
+        res = self.resilience
+        n_slots = len(self._roster)
+        if res is not None and res.restore_fail_p > 0.0:
+            from repro.resilience.policy import stall_pool
+            _local_stalls: Dict[int, np.ndarray] = {}
+
+            def restore_stall(slot: int, gen: int) -> float:
+                if draws is not None:
+                    return draws.restore_stall(res, traj, slot, gen)
+                pool = _local_stalls.get(gen)
+                if pool is None:
+                    pool = _local_stalls[gen] = stall_pool(
+                        res, self.seed, 1, n_slots, gen)
+                return float(pool[0, slot])
+        else:
+            restore_stall = None
+
+        def degr_factor() -> float:
+            if res is None:
+                return 1.0
+            n_alive = sum(1 for w in self.workers.values() if w.alive)
+            return res.degradation.speed_factor(n_alive, n_slots)
         # schedule revocations
         for idx, w in enumerate(self.workers.values()):
             lt = (float(initial_lifetimes[idx])
@@ -275,6 +310,8 @@ class FleetSim:
         steps = 0.0
         last_ckpt_step = 0
         ckpt_time = recompute = lost = 0.0
+        paused_s = restore_s = 0.0
+        stall_until = 0.0
         revocations = replacements = 0
         events: List[Tuple[float, str]] = []
         gpu_seconds: Dict[str, float] = {}
@@ -283,7 +320,7 @@ class FleetSim:
             """Advance wall-clock to `to_t`, producing steps at the current
             cluster speed with SEQUENTIAL checkpoint pauses (§IV-B) at every
             i_c boundary — exact piecewise simulation, no Zeno refinement."""
-            nonlocal steps, t, ckpt_time, last_ckpt_step
+            nonlocal steps, t, ckpt_time, last_ckpt_step, paused_s, restore_s
             sp = self._cluster_speed(t)
             span = to_t - t
             for w in self.workers.values():
@@ -292,6 +329,17 @@ class FleetSim:
             remaining = span
             blocked = (self.chaos is not None
                        and bool(self.chaos.ckpt_blocked(np.array([t]))[0]))
+            if res is not None:
+                # stall/pause gating: spans never cross a stall end (the
+                # "resume" heap entry) or a membership event, so both
+                # conditions are constant within this segment
+                stalled = t < stall_until
+                factor = degr_factor()
+                if stalled:
+                    restore_s += span
+                elif factor == 0.0:
+                    paused_s += span
+                sp = 0.0 if stalled else sp * factor
             if sp > 0:
                 if blocked:
                     # checkpoint-store outage: steps keep flowing but no
@@ -321,6 +369,8 @@ class FleetSim:
             conditions forward — a pending chaos boundary is an event, so
             the projection is recomputed whenever conditions change."""
             sp = self._cluster_speed(t)
+            if res is not None:
+                sp = 0.0 if t < stall_until else sp * degr_factor()
             if sp <= 0:
                 return float("inf")
             remaining_steps = total_steps - steps
@@ -332,6 +382,8 @@ class FleetSim:
 
         while steps < total_steps - 1e-6 and t < max_hours * 3600.0:
             sp = self._cluster_speed(t)
+            if res is not None:
+                sp = 0.0 if t < stall_until else sp * degr_factor()
             if sp <= 0.0 and not q:
                 break
             t_finish = t + time_to_finish()
@@ -369,10 +421,27 @@ class FleetSim:
                             lost_now = steps - last_ckpt_step
                             steps = float(last_ckpt_step)
                             lost += lost_now
+                            # raw cluster speed on purpose: recompute runs
+                            # once the fleet recovers, so the quorum gate
+                            # does not inflate its conversion
                             rec = lost_now / max(self._cluster_speed(t), 1e-9)
                             recompute += rec
                             events.append(
                                 (t, f"chief lost: recompute {lost_now:.0f} steps"))
+                            if restore_stall is not None:
+                                # restore-retry stall, keyed on the revoked
+                                # occupant's generation (before the
+                                # replacement bumps it); a later stall
+                                # overwrites an active one
+                                r_slot, r_gen = slot_of[w.wid]
+                                delay = restore_stall(r_slot, r_gen)
+                                stall_until = t + delay
+                                if delay > 0.0:
+                                    heapq.heappush(q, FleetEvent(
+                                        stall_until, "resume"))
+                                    events.append(
+                                        (t, f"restore retries: stall "
+                                            f"{delay:.1f}s"))
                     if self.replace:
                         slot, gen = slot_of[w.wid]
                         if draws is not None:
@@ -396,6 +465,9 @@ class FleetSim:
                 elif ev.kind == "chaos":
                     # factor-change boundary: advancing to it was the work
                     events.append((t, "chaos boundary"))
+                elif ev.kind == "resume":
+                    # restore-retry stall end: advancing to it was the work
+                    events.append((t, "restore retries complete"))
                 elif ev.kind == "join":
                     w = SimWorker(next_wid, ev.payload["gpu"],
                                   ev.payload["region"], ev.payload["speed"],
@@ -430,7 +502,8 @@ class FleetSim:
         return SimResult(t, int(steps + 1e-6), revocations, replacements,
                          ckpt_time, recompute, lost, events, cost,
                          provider=self.provider.name,
-                         region=regions.pop() if len(regions) == 1 else "")
+                         region=regions.pop() if len(regions) == 1 else "",
+                         paused_s=paused_s, restore_delay_s=restore_s)
 
     def run_many(self, total_steps: int, n: int, max_hours: float = 48.0,
                  start_hour: float = 0.0, *,

@@ -104,6 +104,9 @@ class FleetDraws:
                        is not None else 1
                        for law in self._laws], default=1)
         self._levels = {}
+        # restore-retry stall pools (repro.resilience): keyed like the
+        # replacement levels, shared by all three engines
+        self._stall_levels = {}
 
     def _level(self, gen: int):
         """The pre-drawn pool of generation level `gen` (lazy, keyed on
@@ -156,6 +159,35 @@ class FleetDraws:
                 np.array([gen]),
                 np.array([start_hour_abs - self.start_hour]))[0])
         return lt
+
+    def restore_stall_level(self, res, gen: int) -> np.ndarray:
+        """The `(n, slots)` restore-retry stall matrix (seconds) for
+        generation level `gen` — the keyed-deterministic delay a
+        stock-chief trajectory spends retrying its checkpoint reload
+        after the slot's generation-`gen` occupant is revoked (lazy,
+        keyed on (seed + resilience seed, gen); identical whichever
+        engine asks first)."""
+        pool = self._stall_levels.get(gen)
+        if pool is None:
+            from repro.resilience.policy import stall_pool
+            pool = self._stall_levels[gen] = stall_pool(
+                res, self.seed, self.n, self.n_slots, gen)
+        return pool
+
+    def restore_stall(self, res, traj: int, slot: int, gen: int) -> float:
+        return float(self.restore_stall_level(res, gen)[traj, slot])
+
+    def restore_stalls_batch(self, res, trajs: np.ndarray,
+                             slots: np.ndarray,
+                             gens: np.ndarray) -> np.ndarray:
+        """Vectorized `restore_stall` over one lockstep round's
+        stock-chief revocations, grouped by generation level."""
+        out = np.empty(len(trajs))
+        for g in np.unique(gens):
+            rows = gens == g
+            out[rows] = self.restore_stall_level(res, int(g))[trajs[rows],
+                                                              slots[rows]]
+        return out
 
     def replacement_delays_batch(self, trajs: np.ndarray, slots: np.ndarray,
                                  gens: np.ndarray) -> np.ndarray:
@@ -221,6 +253,9 @@ class _State:
     join_t: np.ndarray         # (n, S) absolute pending-join time, s (inf=none)
     alive_seconds: np.ndarray  # (n, S) cost integrator: alive wall-clock
     done: np.ndarray           # (n,) bool
+    stall_t: np.ndarray        # (n,) restore-retry stall end, s (<=t: none)
+    paused: np.ndarray         # (n,) quorum-pause seconds accrued
+    restore_s: np.ndarray      # (n,) restore-retry stall seconds accrued
 
 
 def run_batched(sim: "FleetSim", total_steps: int, n: int,
@@ -259,6 +294,16 @@ def run_batched(sim: "FleetSim", total_steps: int, n: int,
     handover, replace = sim.handover, sim.replace
     graceful = (sim.provider.graceful_checkpoint_on_warning
                 and sim.provider.warning_seconds >= sim.t_c)
+    # resilience (docs/resilience.md): quorum degradation gates effective
+    # speed on the alive fraction; stock-chief restores stall for the
+    # keyed retry schedule. res_on=False keeps every array op untouched.
+    res = getattr(sim, "resilience", None)
+    res_on = res is not None
+    stall_on = res_on and res.restore_fail_p > 0.0
+    if res_on:
+        quorum = float(res.degradation.quorum)
+        shrink_below = float(res.degradation.shrink_below)
+        shrink_factor = float(res.degradation.shrink_factor)
 
     st = _State(
         t=np.zeros(n), steps=np.zeros(n), last_ckpt=np.zeros(n),
@@ -272,7 +317,8 @@ def run_batched(sim: "FleetSim", total_steps: int, n: int,
                           draws.initial * 3600.0, np.inf),
         join_t=np.full((n, S), np.inf),
         alive_seconds=np.zeros((n, S)),
-        done=np.zeros(n, bool))
+        done=np.zeros(n, bool),
+        stall_t=np.zeros(n), paused=np.zeros(n), restore_s=np.zeros(n))
     st.chief[:, 0] = True   # FleetSim.__init__ marks workers[0] chief
 
     def _cluster_speed(rows: np.ndarray) -> np.ndarray:
@@ -284,6 +330,16 @@ def run_batched(sim: "FleetSim", total_steps: int, n: int,
         m = chaos.speed_mults(st.t[rows])
         return np.minimum((st.alive[rows] * m) @ slot_speed,
                           cap * chaos.ps_factor(st.t[rows]))
+
+    def _degr_factor(rows: np.ndarray) -> np.ndarray:
+        """Quorum-tier speed factor per row: pause (0) below `quorum`
+        alive fraction, `shrink_factor` below `shrink_below`, else 1.
+        The factor gates forward progress only — the stock-chief
+        recompute conversion stays at raw cluster speed (recompute
+        happens after the fleet recovers)."""
+        frac = st.alive[rows].sum(axis=1) / S
+        return np.where(frac < quorum, 0.0,
+                        np.where(frac < shrink_below, shrink_factor, 1.0))
 
     def _advance(rows: np.ndarray, target: np.ndarray) -> None:
         """Closed form of the event engine's `advance`: walk `rows` from
@@ -302,6 +358,16 @@ def run_batched(sim: "FleetSim", total_steps: int, n: int,
             sp = np.minimum((a * m) @ slot_speed,
                             cap * chaos.ps_factor(st.t[rows]))
             blk = chaos.ckpt_blocked(st.t[rows])
+        if res_on:
+            # stall/pause gating (the event engine's `advance` mirror):
+            # spans never cross a stall end or a membership event, so
+            # both conditions are constant within this segment
+            stalled = st.t[rows] < st.stall_t[rows]
+            factor = _degr_factor(rows)
+            st.restore_s[rows] += np.where(stalled, span, 0.0)
+            st.paused[rows] += np.where(~stalled & (factor == 0.0),
+                                        span, 0.0)
+            sp = np.where(stalled, 0.0, sp * factor)
         pos = (sp > 0) & (span > 1e-12)
         if pos.any():
             spp = np.where(pos, sp, 1.0)
@@ -350,6 +416,15 @@ def run_batched(sim: "FleetSim", total_steps: int, n: int,
             # boundaries at/after tmax are never scheduled
             nb = chaos.next_boundary(st.t[rows])
             nb = np.where(nb < tmax, nb, np.inf)
+        if res_on:
+            # a pending stall end is a pure-advancement boundary, exactly
+            # like a chaos factor change (the event engine's no-op
+            # "resume" heap entry); effective speed is gated meanwhile
+            stall_ev = np.where(st.stall_t[rows] > st.t[rows],
+                                st.stall_t[rows], np.inf)
+            nb = np.minimum(nb, stall_ev)
+            sp = np.where(np.isfinite(stall_ev), 0.0,
+                          sp * _degr_factor(rows))
         with np.errstate(divide="ignore", invalid="ignore"):
             rel = np.where(
                 sp > 0,
@@ -413,6 +488,16 @@ def run_batched(sim: "FleetSim", total_steps: int, n: int,
                         sp_after = _cluster_speed(sri)
                         st.recompute[sri] += (lost_now
                                               / np.maximum(sp_after, 1e-9))
+                        if stall_on:
+                            # restore-retry stall: the trajectory reloads
+                            # its checkpoint under the retry schedule —
+                            # keyed on the revoked occupant's generation,
+                            # drawn BEFORE the replacement bumps it. A
+                            # later stall overwrites an active one.
+                            srs = rs[was_chief]
+                            delay = draws.restore_stalls_batch(
+                                res, sri, srs, st.gen[sri, srs])
+                            st.stall_t[sri] = st.t[sri] + delay
                 if replace:
                     new_gen = st.gen[ri, rs] + 1
                     delay = draws.replacement_delays_batch(ri, rs, new_gen)
@@ -447,7 +532,8 @@ def run_batched(sim: "FleetSim", total_steps: int, n: int,
                 "replacements": st.replacements.astype(np.int64),
                 "checkpoint_time_s": st.ckpt_time,
                 "recompute_time_s": st.recompute,
-                "lost_steps": st.lost, "monetary_cost": cost}
+                "lost_steps": st.lost, "monetary_cost": cost,
+                "paused_s": st.paused, "restore_delay_s": st.restore_s}
     return [SimResult(
         total_time_s=float(st.t[j]),
         steps_done=int(st.steps[j] + 1e-6),
@@ -457,4 +543,6 @@ def run_batched(sim: "FleetSim", total_steps: int, n: int,
         recompute_time_s=float(st.recompute[j]),
         lost_steps=float(st.lost[j]),
         events=[], monetary_cost=float(cost[j]),
-        provider=sim.provider.name, region=region) for j in range(n)]
+        provider=sim.provider.name, region=region,
+        paused_s=float(st.paused[j]),
+        restore_delay_s=float(st.restore_s[j])) for j in range(n)]

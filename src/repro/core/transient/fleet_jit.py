@@ -199,10 +199,13 @@ def _gather_slot(arr2d, slot):
 
 @functools.lru_cache(maxsize=None)
 def _compiled(law_kind: str, handover: bool, graceful: bool,
-              replace: bool):
+              replace: bool, resilient: bool):
     """One jitted lockstep program per (law family, chief policy,
-    replacement policy). Shapes (n, S, K, G, F, chaos segments) re-trace
-    automatically; every scalar knob is a traced operand."""
+    replacement policy, resilience). Shapes (n, S, K, G, F, chaos
+    segments) re-trace automatically; every scalar knob is a traced
+    operand. `resilient` gates the quorum-degradation/restore-stall
+    state and math entirely out of the trace — a run without a
+    `ResilienceConfig` compiles the exact pre-resilience program."""
 
     def simulate(st, ar):
         S = ar["slot_speed"].shape[0]
@@ -271,6 +274,21 @@ def _compiled(law_kind: str, handover: bool, graceful: bool,
             nb = jnp.append(ar["boundaries"], P_INF)[
                 jnp.searchsorted(ar["boundaries"], t, side="right")]
             nb = jnp.where(nb < ar["tmax"], nb, P_INF)
+            if resilient:
+                # a pending restore-retry stall end is a pure-advancement
+                # boundary (the event engine's no-op "resume" heap entry,
+                # never clipped at tmax); effective speed is gated to 0
+                # meanwhile, and otherwise by the quorum tier on the
+                # alive fraction (fleet_batched._degr_factor)
+                stall_ev = jnp.where(st["stall_t"] > t, st["stall_t"],
+                                     P_INF)
+                nb = jnp.minimum(nb, stall_ev)
+                frac = jnp.sum(st["alive"], axis=1) / S
+                factor = jnp.where(
+                    frac < ar["quorum"], 0.0,
+                    jnp.where(frac < ar["shrink_below"],
+                              ar["shrink_factor"], 1.0))
+                sp = jnp.where(jnp.isfinite(stall_ev), 0.0, sp * factor)
             i_c, t_c, total = ar["i_c"], ar["t_c"], ar["total"]
             rel = jnp.where(
                 sp > 0,
@@ -299,6 +317,17 @@ def _compiled(law_kind: str, handover: bool, graceful: bool,
             target = jnp.where(ev, jnp.maximum(nxt, t), t_fin)
             # ---- closed-form advance to `target` (fleet_batched._advance)
             span = jnp.where(move, target - t, 0.0)
+            if resilient:
+                # exclusive accrual per span: a stall span is restore
+                # delay; a quorum pause (not stalled, factor 0) is
+                # paused time. `sp` is already gated above, so the
+                # stepping math below produces nothing for either.
+                seg_stall = st["stall_t"] > t
+                restore_s = (st["restore_s"]
+                             + jnp.where(seg_stall, span, 0.0))
+                paused = (st["paused"]
+                          + jnp.where(~seg_stall & (factor == 0.0),
+                                      span, 0.0))
             alive_seconds = (st["alive_seconds"]
                              + st["alive"] * span[:, None])
             pos = move & (sp > 0) & (span > 1e-12)
@@ -335,6 +364,8 @@ def _compiled(law_kind: str, handover: bool, graceful: bool,
             revoke_t = jnp.where(rev2d, P_INF, st["revoke_t"])
             revocations = st["revocations"] + is_rev
             chief, lost, recompute = st["chief"], st["lost"], st["recompute"]
+            if resilient:
+                stall_t = st["stall_t"]
             if handover:
                 chief = chief & ~rev2d
                 keys = jnp.where(alive, st["order_key"], P_INF)
@@ -352,8 +383,18 @@ def _compiled(law_kind: str, handover: bool, graceful: bool,
                 steps = jnp.where(sm, last_ckpt, steps)
                 lost = lost + lost_now
                 sp_after = cluster_speed(t, alive)   # post-revoke fleet
+                # raw cluster speed on purpose: recompute happens after
+                # the fleet recovers, so degradation never inflates it
                 recompute = recompute + jnp.where(
                     sm, lost_now / jnp.maximum(sp_after, 1e-9), 0.0)
+                if resilient:
+                    # restore-retry stall, keyed on the revoked
+                    # occupant's generation (pre-bump — the replace
+                    # block below bumps it); a later stall overwrites an
+                    # active one, even shortening it
+                    lvl_s = jnp.clip(gen_at, 0, G - 1)
+                    sdelay = ar["stalls"][lvl_s * S + slot, st["orig"]]
+                    stall_t = jnp.where(sm, t + sdelay, stall_t)
             gen, join_t = st["gen"], st["join_t"]
             orig = st["orig"]        # row in the full-width pools
             if replace:
@@ -393,14 +434,19 @@ def _compiled(law_kind: str, handover: bool, graceful: bool,
             revoke_t = lax.cond(jnp.any(is_join), _sample_joins,
                                 lambda r: r, revoke_t)
             done = done | (steps >= total - 1e-6) | (t >= ar["tmax"])
-            return {"t": t, "steps": steps, "last_ckpt": last_ckpt,
-                    "ckpt_time": ckpt_time, "recompute": recompute,
-                    "lost": lost, "revocations": revocations,
-                    "replacements": replacements, "alive": alive,
-                    "chief": chief, "gen": gen, "order_key": order_key,
-                    "next_key": next_key, "revoke_t": revoke_t,
-                    "join_t": join_t, "alive_seconds": alive_seconds,
-                    "done": done, "stalled": stalled, "orig": orig}
+            out = {"t": t, "steps": steps, "last_ckpt": last_ckpt,
+                   "ckpt_time": ckpt_time, "recompute": recompute,
+                   "lost": lost, "revocations": revocations,
+                   "replacements": replacements, "alive": alive,
+                   "chief": chief, "gen": gen, "order_key": order_key,
+                   "next_key": next_key, "revoke_t": revoke_t,
+                   "join_t": join_t, "alive_seconds": alive_seconds,
+                   "done": done, "stalled": stalled, "orig": orig}
+            if resilient:
+                out["stall_t"] = stall_t
+                out["paused"] = paused
+                out["restore_s"] = restore_s
+            return out
 
         return lax.while_loop(cond, body, st)
 
@@ -435,13 +481,17 @@ def _put(x, sharding, axis=0):
         sharding.mesh, PartitionSpec(*spec)))
 
 
-def _pools(draws: "FleetDraws", G: int, has_chaos: bool):
+def _pools(draws: "FleetDraws", G: int, has_chaos: bool, res=None):
     """FleetDraws generation levels 1..G as device arrays in the folded
     `(level * S + slot, trajectory, ...)` layout the body's single
     `take_along_axis` per pool expects. Cached on the draws object — the
-    pools are pure functions of (draws, G), so repeat calls (planner
-    re-scoring, `_best_of` benchmark reps) reuse the device copies."""
-    key = (G, bool(has_chaos))
+    pools are pure functions of (draws, G, res), so repeat calls
+    (planner re-scoring, `_best_of` benchmark reps) reuse the device
+    copies. With a `ResilienceConfig` the restore-retry stall levels
+    ride along, indexed by the revoked occupant's generation (0..G-1 —
+    level paging freezes any revoke whose occupant reached G before it
+    mutates state, so the index never pages off the pool)."""
+    key = (G, bool(has_chaos), res)
     cache = draws.__dict__.setdefault("_jit_pool_cache", {})
     if key in cache:
         return cache[key]
@@ -454,6 +504,11 @@ def _pools(draws: "FleetDraws", G: int, has_chaos: bool):
         uniforms[g - 1] = np.swapaxes(u, 0, 1)
     out = {"delays": jnp.asarray(delays.reshape(G * S, n)),
            "uniforms": jnp.asarray(uniforms.reshape(G * S, n, K))}
+    if res is not None:
+        stalls = np.empty((G, S, n))
+        for g in range(G):
+            stalls[g] = draws.restore_stall_level(res, g).T
+        out["stalls"] = jnp.asarray(stalls.reshape(G * S, n))
     if has_chaos:
         F = len(draws.chaos.hazards)
         ju = np.empty((G, S, n, F))
@@ -521,8 +576,10 @@ def run_jit(sim: "FleetSim", total_steps: int, n: int,
     has_haz = has_chaos and len(chaos.hazards) > 0
     graceful = (sim.provider.graceful_checkpoint_on_warning
                 and sim.provider.warning_seconds >= sim.t_c)
+    resil = getattr(sim, "resilience", None)
+    resilient = resil is not None
     fn = _compiled(spec_kind, bool(sim.handover), bool(graceful),
-                   bool(sim.replace))
+                   bool(sim.replace), resilient)
 
     with enable_x64():
         traj_sh, rep_sh = _shard(n)
@@ -553,6 +610,12 @@ def run_jit(sim: "FleetSim", total_steps: int, n: int,
               "hz_end": _put(hz_e, rep_sh),
               "hz_rate": _put(hz_r, rep_sh),
               "hz_cols": _put(hz_c, rep_sh)}
+        if resilient:
+            ar["quorum"] = jnp.asarray(float(resil.degradation.quorum))
+            ar["shrink_below"] = jnp.asarray(
+                float(resil.degradation.shrink_below))
+            ar["shrink_factor"] = jnp.asarray(
+                float(resil.degradation.shrink_factor))
         for name, arr in law_arrays.items():
             ar[name] = _put(arr, rep_sh)
 
@@ -581,6 +644,10 @@ def run_jit(sim: "FleetSim", total_steps: int, n: int,
               "done": done0, "stalled": np.zeros(n_pad, bool),
               "orig": np.concatenate([np.arange(n, dtype=np.int32),
                                       np.zeros(pad, np.int32)])}
+        if resilient:
+            st["stall_t"] = np.zeros(n_pad)
+            st["paused"] = np.zeros(n_pad)
+            st["restore_s"] = np.zeros(n_pad)
         st = {key: _put(v, traj_sh) for key, v in st.items()}
 
         if sim.replace:
@@ -597,12 +664,17 @@ def run_jit(sim: "FleetSim", total_steps: int, n: int,
         sel = np.concatenate([np.arange(n), np.zeros(pad, np.int64)])
         valid = np.zeros(n_pad, bool)
         valid[:n] = True
+        harvest = _HARVEST + (("paused", "restore_s")
+                              if resilient else ())
         res = {key: np.zeros(n, np.int64 if key in
                              ("revocations", "replacements") else float)
-               for key in _HARVEST if key not in
+               for key in harvest if key not in
                ("alive_seconds", "done", "stalled")}
         res["alive_seconds"] = np.zeros((n, S))
-        res_keys = [key for key in _HARVEST
+        if not resilient:     # raw output always carries both keys
+            res["paused"] = np.zeros(n)
+            res["restore_s"] = np.zeros(n)
+        res_keys = [key for key in harvest
                     if key not in ("done", "stalled")]
 
         def _scatter(lanes: np.ndarray):
@@ -623,7 +695,7 @@ def run_jit(sim: "FleetSim", total_steps: int, n: int,
         ar_g = dict(ar)
 
         def _mount_pools():
-            for name, arr in _pools(draws, G, has_haz).items():
+            for name, arr in _pools(draws, G, has_haz, resil).items():
                 ar_g[name] = (arr if traj_sh is None
                               else jax.device_put(arr, rep_sh))
 
@@ -672,7 +744,9 @@ def run_jit(sim: "FleetSim", total_steps: int, n: int,
                 "replacements": res["replacements"],
                 "checkpoint_time_s": res["ckpt_time"],
                 "recompute_time_s": res["recompute"],
-                "lost_steps": res["lost"], "monetary_cost": cost}
+                "lost_steps": res["lost"], "monetary_cost": cost,
+                "paused_s": res["paused"],
+                "restore_delay_s": res["restore_s"]}
     return [SimResult(
         total_time_s=float(res["t"][j]),
         steps_done=int(res["steps"][j] + 1e-6),
@@ -682,4 +756,6 @@ def run_jit(sim: "FleetSim", total_steps: int, n: int,
         recompute_time_s=float(res["recompute"][j]),
         lost_steps=float(res["lost"][j]),
         events=[], monetary_cost=float(cost[j]),
-        provider=sim.provider.name, region=region) for j in range(n)]
+        provider=sim.provider.name, region=region,
+        paused_s=float(res["paused"][j]),
+        restore_delay_s=float(res["restore_s"][j])) for j in range(n)]

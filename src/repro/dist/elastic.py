@@ -49,11 +49,19 @@ class ElasticMembership:
         self._members: Dict[int, Member] = {m.id: m for m in members}
         self.global_batch = int(global_batch)
         self.epoch_no = 0
+        # launch-roster size: the denominator of the quorum fraction a
+        # DegradationPolicy tiers on (replacement joins restore it toward
+        # 1.0; over-joins may push it above — both are meaningful)
+        self.roster_size = max(1, len(self._members))
 
     # ------------------------------------------------------------- queries
     @property
     def n_alive(self) -> int:
         return len(self._members)
+
+    @property
+    def alive_fraction(self) -> float:
+        return self.n_alive / self.roster_size
 
     def __contains__(self, member_id: int) -> bool:
         return member_id in self._members

@@ -66,6 +66,64 @@ def add_train_args(p: argparse.ArgumentParser,
                         "repeated runs skip re-jitting identical steps")
 
 
+def add_resilience_args(p: argparse.ArgumentParser) -> None:
+    """Recovery-policy flags (docs/resilience.md). All default to unset;
+    `resilience_from_args` returns None (legacy fail-fast behavior)
+    unless at least one is given."""
+    g = p.add_argument_group("resilience")
+    g.add_argument("--retry-attempts", type=int, default=None,
+                   help="max attempts per fallible op (save/restore/join)")
+    g.add_argument("--retry-base", type=float, default=None,
+                   help="first backoff delay, seconds")
+    g.add_argument("--retry-max-delay", type=float, default=None,
+                   help="backoff ceiling, seconds")
+    g.add_argument("--retry-deadline", type=float, default=None,
+                   help="total backoff budget per op, seconds")
+    g.add_argument("--quorum", type=float, default=None,
+                   help="pause training below this alive fraction")
+    g.add_argument("--shrink-below", type=float, default=None,
+                   help="shrink the global batch below this alive "
+                        "fraction (but above --quorum)")
+    g.add_argument("--shrink-factor", type=float, default=None,
+                   help="global-batch factor while shrunk (default 0.5)")
+    g.add_argument("--restore-fail-p", type=float, default=None,
+                   help="simulated per-attempt restore failure "
+                        "probability (fleet sim stall model)")
+
+
+def resilience_from_args(args: argparse.Namespace):
+    """`ResilienceConfig` from the add_resilience_args namespace, or None
+    when no resilience flag was passed (exact legacy behavior)."""
+    names = ("retry_attempts", "retry_base", "retry_max_delay",
+             "retry_deadline", "quorum", "shrink_below", "shrink_factor",
+             "restore_fail_p")
+    vals = {n: getattr(args, n, None) for n in names}
+    if all(v is None for v in vals.values()):
+        return None
+    from repro.resilience import (DegradationPolicy, ResilienceConfig,
+                                  RetryPolicy)
+    retry = RetryPolicy()
+    if vals["retry_attempts"] is not None:
+        retry = dataclasses.replace(retry,
+                                    max_attempts=vals["retry_attempts"])
+    if vals["retry_base"] is not None:
+        retry = dataclasses.replace(retry, base_delay_s=vals["retry_base"])
+    if vals["retry_max_delay"] is not None:
+        retry = dataclasses.replace(retry,
+                                    max_delay_s=vals["retry_max_delay"])
+    if vals["retry_deadline"] is not None:
+        retry = dataclasses.replace(retry,
+                                    deadline_s=vals["retry_deadline"])
+    degr = DegradationPolicy(
+        quorum=vals["quorum"] or 0.0,
+        shrink_below=vals["shrink_below"] or 0.0,
+        shrink_factor=(0.5 if vals["shrink_factor"] is None
+                       else vals["shrink_factor"]))
+    return ResilienceConfig(retry=retry, degradation=degr,
+                            restore_fail_p=vals["restore_fail_p"] or 0.0,
+                            seed=getattr(args, "seed", 0) or 0)
+
+
 def add_serve_args(p: argparse.ArgumentParser) -> None:
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--prompt-len", type=int, default=32)
@@ -114,6 +172,9 @@ def run_config_from_args(args: argparse.Namespace) -> RunConfig:
     if "total_steps" in picked:
         picked["warmup_steps"] = max(1, picked["total_steps"] // 10)
     picked["zero1"] = False  # single-host CPU path; dryrun covers zero1
+    res = resilience_from_args(args)
+    if res is not None:
+        picked["resilience"] = res
     return dataclasses.replace(base, **picked)
 
 

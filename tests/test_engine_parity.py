@@ -70,6 +70,15 @@ def _assert_parity(mk, run_args, engines=("batched", "event")):
         np.testing.assert_allclose([r.lost_steps for r in j.results],
                                    [r.lost_steps for r in o.results],
                                    rtol=1e-6, atol=1e-6)
+        # recovery accrual (zeros when resilience is off) is part of the
+        # contract too: pause windows and retry-delayed restores must be
+        # engine-independent (docs/resilience.md)
+        np.testing.assert_allclose([r.paused_s for r in j.results],
+                                   [r.paused_s for r in o.results],
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose([r.restore_delay_s for r in j.results],
+                                   [r.restore_delay_s for r in o.results],
+                                   rtol=1e-6, atol=1e-6)
         assert j.stats.finished == o.stats.finished
     return j
 
@@ -127,6 +136,39 @@ def test_fuzz_three_engine_parity(cell, n_workers, horizon, compression,
                        n_workers=n_workers, handover=handover,
                        grad_compression=compression)
     _assert_parity(mk, (150_000, 12, horizon, start_hour))
+
+
+# -------------------------------------------------- resilience parity
+@pytest.mark.parametrize("quorum", [0.6, 0.9])
+def test_resilience_three_engine_parity(quorum):
+    """Recovery semantics ride the same contract: keyed restore-retry
+    stalls after stock-chief revocations and quorum pause windows must
+    reproduce bit-for-bit on all three engines (`paused_s` /
+    `restore_delay_s` asserted inside `_assert_parity`), and arming a
+    `ResilienceConfig` must not perturb counts or completion times'
+    agreement."""
+    from repro.resilience import (DegradationPolicy, ResilienceConfig,
+                                  RetryPolicy)
+    res = ResilienceConfig(
+        retry=RetryPolicy(max_attempts=3, base_delay_s=60.0,
+                          multiplier=2.0, max_delay_s=600.0, jitter=0.5,
+                          deadline_s=1800.0),
+        degradation=DegradationPolicy(quorum=quorum, shrink_below=0.95,
+                                      shrink_factor=0.7),
+        restore_fail_p=0.7, seed=5)
+
+    def mk():
+        sim = _mk_sim(seed=5, region="europe-west1", gpu="k80",
+                      n_workers=8, handover=False, i_c=1000)
+        sim.resilience = res
+        return sim
+    j = _assert_parity(mk, (250_000, 12, 32.0, 0.0))
+    # the config is chosen so the stall channel always fires; the pause
+    # channel needs the tight quorum (8-worker fleets rarely drop below
+    # 60 % alive with replacement on)
+    assert sum(r.restore_delay_s for r in j.results) > 0.0
+    if quorum >= 0.9:
+        assert sum(r.paused_s for r in j.results) > 0.0
 
 
 # ----------------------------------------------------- chaos scenarios

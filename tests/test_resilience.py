@@ -1,0 +1,264 @@
+"""Recovery-layer tests (docs/resilience.md, DESIGN.md §8): backoff
+properties, keyed stall draws, quorum tiers, `call_with_retries`
+semantics, checkpoint integrity fallback and the writer-lease
+kill-holder-mid-save regression."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.checkpointer import (CheckpointCorruptError,
+                                           Checkpointer, LeaseLostError)
+from repro.resilience import (DegradationPolicy, ResilienceConfig,
+                              RetryExhausted, RetryPolicy,
+                              call_with_retries, stall_from_uniforms,
+                              stall_pool)
+from repro.resilience.policy import live_jitter_uniforms
+
+
+# ------------------------------------------------------------- RetryPolicy
+@given(attempt=st.integers(1, 16), u=st.floats(0.0, 1.0),
+       base=st.floats(0.01, 10.0), mult=st.floats(1.0, 4.0),
+       jitter=st.floats(0.0, 1.0))
+@settings(max_examples=64, deadline=None)
+def test_backoff_bounded_and_positive(attempt, u, base, mult, jitter):
+    p = RetryPolicy(base_delay_s=base, multiplier=mult, max_delay_s=60.0,
+                    jitter=jitter)
+    d = p.backoff(attempt, u)
+    assert 0.0 <= d <= p.max_delay_s * (1.0 + p.jitter)
+    # jitter is symmetric around the deterministic schedule
+    mid = min(p.max_delay_s, base * mult ** (attempt - 1))
+    assert abs(d - mid) <= jitter * mid + 1e-12
+
+
+def test_backoff_monotone_before_cap_and_deterministic():
+    p = RetryPolicy(base_delay_s=0.5, multiplier=2.0, max_delay_s=8.0,
+                    jitter=0.25)
+    mids = [p.backoff(a, 0.5) for a in range(1, 8)]
+    assert mids == sorted(mids)          # u=0.5 → no jitter → monotone
+    assert mids[-1] == p.max_delay_s     # and capped
+    assert p.backoff(3, 0.77) == p.backoff(3, 0.77)
+
+
+# ------------------------------------------------------------ stall draws
+@given(fail_p=st.floats(0.0, 1.0), seed=st.integers(0, 500))
+@settings(max_examples=32, deadline=None)
+def test_stall_within_deadline(fail_p, seed):
+    retry = RetryPolicy(max_attempts=5, base_delay_s=1.0, max_delay_s=30.0,
+                        jitter=0.5, deadline_s=40.0)
+    u = np.random.default_rng(seed).random((7, 3, 10))
+    s = stall_from_uniforms(retry, fail_p, u)
+    assert s.shape == (7, 3)
+    assert (s >= 0.0).all() and (s <= retry.deadline_s).all()
+
+
+def test_stall_edge_probabilities():
+    retry = RetryPolicy(max_attempts=4, base_delay_s=2.0, multiplier=2.0,
+                        max_delay_s=100.0, jitter=0.0, deadline_s=1e9)
+    u = np.random.default_rng(0).random((5, 8))
+    # fail_p=0: no attempt ever fails, stall is exactly zero
+    assert (stall_from_uniforms(retry, 0.0, u) == 0.0).all()
+    # fail_p=1: every attempt fails — with zero jitter the stall is the
+    # full deterministic schedule 2+4+8+16
+    np.testing.assert_allclose(stall_from_uniforms(retry, 1.0, u), 30.0)
+
+
+def test_stall_pool_rows_stable_across_ensemble_width():
+    """Trajectory j's stall row must not depend on how many trajectories
+    were drawn alongside it — the FleetDraws prefix contract."""
+    res = ResilienceConfig(restore_fail_p=0.7, seed=5)
+    small = stall_pool(res, sim_seed=3, n=4, slots=8, gen=1)
+    large = stall_pool(res, sim_seed=3, n=16, slots=8, gen=1)
+    np.testing.assert_array_equal(small, large[:4])
+    # distinct generations draw from distinct keyed streams
+    other = stall_pool(res, sim_seed=3, n=4, slots=8, gen=2)
+    assert not np.array_equal(small, other)
+
+
+# ------------------------------------------------------------ quorum tiers
+def test_degradation_tiers_and_boundaries():
+    d = DegradationPolicy(quorum=0.5, shrink_below=0.75, shrink_factor=0.6)
+    assert d.tier(1, 4) == "pause"            # 0.25 < 0.5
+    assert d.tier(2, 4) == "shrink_batch"     # 0.5 is NOT below quorum
+    assert d.tier(3, 4) == "continue"         # 0.75 is NOT below shrink
+    assert d.speed_factor(2, 4) == 0.6
+    assert d.speed_factor(1, 4) == 0.0
+    # the defaults never degrade — ResilienceConfig() preserves behavior
+    assert DegradationPolicy().tier(0, 4) == "continue"
+    assert DegradationPolicy().speed_factor(1, 1000) == 1.0
+
+
+# -------------------------------------------------------- call_with_retries
+def _no_sleep(_dt):
+    pass
+
+
+def test_retries_recover_and_report_attempts():
+    calls = []
+    events = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise IOError("transient")
+        return "ok"
+
+    out, attempts = call_with_retries(
+        flaky, RetryPolicy(max_attempts=4), op="save", sleep=_no_sleep,
+        emit=lambda k, p: events.append((k, p)))
+    assert (out, attempts) == ("ok", 3)
+    assert [p["outcome"] for _, p in events] == ["fail", "fail", "ok"]
+    assert all(k == "retry" and p["op"] == "save" for k, p in events)
+
+
+def test_retries_exhaust_with_ledger():
+    events = []
+
+    def always():
+        raise IOError("down")
+
+    with pytest.raises(RetryExhausted) as ei:
+        call_with_retries(always, RetryPolicy(max_attempts=3), op="save",
+                          sleep=_no_sleep,
+                          emit=lambda k, p: events.append(p))
+    assert ei.value.attempts == 3
+    assert isinstance(ei.value.last, IOError)
+    # the ledger the chaos gate checks: exactly one gave_up record
+    assert [p["outcome"] for p in events] == ["fail", "fail", "gave_up"]
+    assert events[-1]["backoff_s"] == 0.0    # no sleep after giving up
+
+
+def test_non_transient_errors_propagate_unretried():
+    calls = []
+
+    def broken():
+        calls.append(1)
+        raise KeyError("not transient")
+
+    with pytest.raises(KeyError):
+        call_with_retries(broken, RetryPolicy(max_attempts=4),
+                          sleep=_no_sleep, retry_on=(IOError,))
+    assert len(calls) == 1
+
+
+def test_sleep_total_never_exceeds_deadline():
+    slept = []
+
+    def always():
+        raise IOError("down")
+
+    policy = RetryPolicy(max_attempts=10, base_delay_s=4.0, multiplier=3.0,
+                         max_delay_s=50.0, jitter=0.25, deadline_s=20.0)
+    with pytest.raises(RetryExhausted):
+        call_with_retries(always, policy, sleep=slept.append)
+    assert sum(slept) <= policy.deadline_s + 1e-9
+
+
+def test_retry_delays_deterministic_per_seed_and_key():
+    a = live_jitter_uniforms(RetryPolicy(), seed=7, key=11)
+    b = live_jitter_uniforms(RetryPolicy(), seed=7, key=11)
+    c = live_jitter_uniforms(RetryPolicy(), seed=7, key=12)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+    # the trainer tags its restore stream key=-1 — negative keys must
+    # wrap, not crash (SeedSequence entropy is non-negative)
+    np.testing.assert_array_equal(
+        live_jitter_uniforms(RetryPolicy(), seed=7, key=-1),
+        live_jitter_uniforms(RetryPolicy(), seed=7, key=2 ** 32 - 1))
+
+
+# --------------------------------------------------- checkpoint integrity
+def _tree(step: float):
+    return {"w": jnp.full((4, 3), step, jnp.float32),
+            "opt": {"mu": jnp.arange(6, dtype=jnp.float32) + step}}
+
+
+def _save_steps(root, steps, holder="w0"):
+    ck = Checkpointer(root, holder=holder, keep=10)
+    for s in steps:
+        ck.save(s, _tree(float(s)))
+    return ck
+
+
+def test_restore_latest_valid_falls_back_past_corruption(tmp_path):
+    ck = _save_steps(str(tmp_path), [5, 10, 15])
+    ck.corrupt(15)
+    skipped = []
+    tree, step, depth = ck.restore_latest_valid(
+        _tree(0.0), on_fallback=lambda s, e: skipped.append(s))
+    assert (step, depth, skipped) == (10, 1, [15])
+    np.testing.assert_allclose(tree["w"], 10.0)
+    with pytest.raises(CheckpointCorruptError):
+        ck.validate(15)
+    ck.validate(10)                      # untouched generation stays clean
+
+
+def test_restore_fails_loudly_when_every_generation_is_bad(tmp_path):
+    ck = _save_steps(str(tmp_path), [5, 10])
+    ck.corrupt(5)
+    ck.corrupt(10)
+    with pytest.raises(CheckpointCorruptError, match="every committed"):
+        ck.restore_latest_valid(_tree(0.0))
+
+
+def test_validate_catches_torn_payload(tmp_path):
+    ck = _save_steps(str(tmp_path), [3])
+    data = os.path.join(str(tmp_path), "step_3", "data-00000.bin")
+    with open(data, "r+b") as f:          # truncate: a torn write
+        f.truncate(8)
+    with pytest.raises(CheckpointCorruptError, match="torn|checksum"):
+        ck.validate(3)
+
+
+def test_all_steps_ignores_stray_entries_and_stale_latest(tmp_path):
+    ck = _save_steps(str(tmp_path), [5, 10])
+    root = str(tmp_path)
+    open(os.path.join(root, "step_backup"), "w").write("x")     # file
+    os.makedirs(os.path.join(root, ".tmp_step_99"))             # tmp dir
+    os.makedirs(os.path.join(root, "step_12x"))                 # bad name
+    assert ck.all_steps() == [5, 10]
+    # a LATEST pointing at a GC'd step falls through to the newest dir
+    with open(os.path.join(root, "LATEST"), "w") as f:
+        f.write("999")
+    assert ck.latest_step() == 10
+    _tree_out, step, depth = ck.restore_latest_valid(_tree(0.0))
+    assert (step, depth) == (10, 0)
+
+
+# ------------------------------------------------------------ writer lease
+def test_lease_steal_after_expiry_uses_injected_clock(tmp_path):
+    clock = [0.0]
+    a = Checkpointer(str(tmp_path), holder="a", clock=lambda: clock[0])
+    b = Checkpointer(str(tmp_path), holder="b", clock=lambda: clock[0])
+    assert a.lease.try_acquire()
+    assert not b.lease.try_acquire()     # live lease: steal refused
+    clock[0] = a.lease.ttl + 1.0
+    assert b.lease.try_acquire()         # expired: steal succeeds
+    assert not a.lease.held_by_me()
+
+
+def test_kill_holder_mid_save_aborts_commit(tmp_path):
+    """Regression: the holder is revoked after starting a save and a
+    survivor steals the lease; the holder's commit must abort before the
+    rename so the contested write never becomes visible."""
+    root = str(tmp_path)
+    a = _save_steps(root, [5], holder="a")
+    b = Checkpointer(root, holder="b")
+    assert a.lease.held_by_me()
+    # revocation lands while a's step-10 save is in flight
+    a.lease.notify_revoked()
+    assert b.lease.try_acquire()
+    flat = {k: np.asarray(v) for k, v in
+            (("w", np.ones(3)), ("b", np.zeros(2)))}
+    with pytest.raises(LeaseLostError):
+        a._write(10, flat, {}, fenced=True)
+    assert a.all_steps() == [5]          # nothing torn was published
+    assert not os.path.exists(os.path.join(root, ".tmp_step_10"))
+    # the survivor can checkpoint immediately — no recompute-from-scratch
+    assert b.save(10, _tree(10.0)) is not None
+    assert b.all_steps() == [5, 10]
+    with open(os.path.join(root, "writer.lease")) as f:
+        assert json.load(f)["holder"] == "b"
