@@ -35,6 +35,7 @@ MODULES = [
     "mc_speed",
     "lm_speed_models",
     "chaos",
+    "recalib",
     "roofline",
 ]
 

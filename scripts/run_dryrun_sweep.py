@@ -1,93 +1,19 @@
 #!/usr/bin/env python
-"""Run the full (arch x shape) dry-run sweep as parallel subprocesses.
-
-Each cell is an isolated process (jax device-count env must be set before
-import; a crash in one cell cannot kill the sweep). Resumable: cells with an
-existing artifact are skipped.
-
-Usage: python scripts/run_dryrun_sweep.py [--jobs 3] [--mesh both]
-"""
+"""Deprecation shim: the sweep driver now lives in `repro.launch.sweep`
+(`python -m repro dryrun --sweep`). This wrapper keeps the old entry point
+working for scripts that still call it."""
 from __future__ import annotations
 
-import json
 import os
-import subprocess
 import sys
-import time
-from concurrent.futures import ThreadPoolExecutor, as_completed
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-ART = os.path.join(ROOT, "artifacts", "dryrun")
-
 sys.path.insert(0, os.path.join(ROOT, "src"))
-from repro.configs import ALL_SHAPES, ARCH_IDS, get_config, valid_cells  # noqa: E402
 
-
-def cells():
-    out = []
-    for arch in ARCH_IDS:
-        cfg = get_config(arch)
-        valid = {s.name for s in valid_cells(cfg)}
-        for s in ALL_SHAPES:
-            out.append((arch, s.name, s.name in valid))
-    return out
-
-
-def run_one(arch: str, shape: str, mesh: str, timeout: int):
-    path = os.path.join(ART, f"{arch}__{shape}.json")
-    if os.path.exists(path):
-        return arch, shape, "cached"
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
-           "--shape", shape, "--mesh", mesh, "--out", path]
-    t0 = time.time()
-    try:
-        p = subprocess.run(cmd, env=env, capture_output=True, text=True,
-                           timeout=timeout, cwd=ROOT)
-        status = "ok" if p.returncode == 0 else "FAIL"
-        if p.returncode != 0:
-            with open(path + ".err", "w") as f:
-                f.write(p.stdout[-5000:] + "\n--stderr--\n" + p.stderr[-10000:])
-    except subprocess.TimeoutExpired:
-        status = "TIMEOUT"
-        with open(path + ".err", "w") as f:
-            f.write("timeout\n")
-    return arch, shape, f"{status} ({time.time()-t0:.0f}s)"
-
-
-def main():
-    from repro.launch.cli import make_parser
-    ap = make_parser("run_dryrun_sweep",
-                     "parallel (arch x shape) dry-run sweep, resumable")
-    ap.add_argument("--jobs", type=int, default=3)
-    ap.add_argument("--mesh", default="both")
-    ap.add_argument("--timeout", type=int, default=3000)
-    args = ap.parse_args()
-    os.makedirs(ART, exist_ok=True)
-
-    todo = cells()
-    print(f"{len(todo)} cells total")
-    with ThreadPoolExecutor(max_workers=args.jobs) as ex:
-        futs = {}
-        for arch, shape, valid in todo:
-            if not valid:
-                # still record the skip (spec: note skips)
-                path = os.path.join(ART, f"{arch}__{shape}.json")
-                if not os.path.exists(path):
-                    with open(path, "w") as f:
-                        json.dump([{"arch": arch, "shape": shape, "ok": False,
-                                    "skipped": True,
-                                    "reason": "inapplicable cell "
-                                              "(docs/DESIGN.md §4)"}], f)
-                print(f"SKIP {arch} {shape}")
-                continue
-            futs[ex.submit(run_one, arch, shape, args.mesh,
-                           args.timeout)] = (arch, shape)
-        for fut in as_completed(futs):
-            arch, shape, status = fut.result()
-            print(f"{arch:24s} {shape:12s} {status}", flush=True)
-
+from repro.launch import sweep  # noqa: E402
 
 if __name__ == "__main__":
-    main()
+    # keep the historical default of writing under the repo root even when
+    # invoked from elsewhere
+    os.chdir(ROOT)
+    sys.exit(sweep.main())

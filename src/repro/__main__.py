@@ -31,6 +31,7 @@ def build_parser() -> argparse.ArgumentParser:
     cli.add_batch_args(t)
     cli.add_train_args(t)
     cli.add_resilience_args(t)
+    cli.add_recalib_args(t)
 
     s = sub.add_parser("serve", help="prefill + token-by-token decode")
     cli.add_arch_arg(s)
@@ -107,6 +108,9 @@ def build_parser() -> argparse.ArgumentParser:
     # recovery flags arm session.run.resilience, which the chaos runner's
     # simulated fleets AND live trainer runs inherit (docs/resilience.md)
     cli.add_resilience_args(c)
+    # --recalibrate arms session.run.recalibration the same way: the live
+    # runs drift-detect and refit mid-scenario (docs/calibration.md)
+    cli.add_recalib_args(c)
 
     b = sub.add_parser("bench", help="paper table/figure benchmark driver")
     b.add_argument("--only", default="",
@@ -115,11 +119,15 @@ def build_parser() -> argparse.ArgumentParser:
                    help="list available benchmark modules and exit")
 
     # `dryrun` is dispatched before argparse in main(): its flags are owned
-    # by repro.launch.dryrun, whose import must also happen first (it pins
-    # the XLA host-device count). Registered here for `--help` only.
+    # by repro.launch.dryrun (or repro.launch.sweep under --sweep), whose
+    # import must also happen first (it pins the XLA host-device count).
+    # Registered here for `--help` only.
     sub.add_parser("dryrun", help="AOT lower/compile on production meshes "
-                                  "(512 host devices); flags forwarded to "
-                                  "repro.launch.dryrun", add_help=False)
+                                  "(512 host devices); --sweep fans out the "
+                                  "full arch x shape matrix with resumable "
+                                  "artifacts; flags forwarded to "
+                                  "repro.launch.dryrun / .sweep",
+                   add_help=False)
     return p
 
 
@@ -292,6 +300,11 @@ def _cmd_bench(args) -> int:
 
 
 def _cmd_dryrun(rest: List[str]) -> int:
+    if "--sweep" in rest:
+        # the sweep driver never imports jax itself (each cell runs in a
+        # subprocess), so it must not pull in repro.launch.dryrun here
+        from repro.launch import sweep
+        return sweep.main([a for a in rest if a != "--sweep"])
     from repro.launch import dryrun
     dryrun.main(rest)
     return 0

@@ -11,7 +11,7 @@ without threading callbacks through every layer. Kinds emitted today:
                                               (chaos ckpt-store outage;
                                                attempts/error appear when a
                                                resilience retry gave up)
-  detection           {step, bottleneck, action, deviation}
+  detection           {step, bottleneck, action, deviation, model_version}
   restore             {step}
   mitigation          {step, action, n_ps, grad_compression, ...}
   fault               {step, fault, ...}      (chaos injections)
@@ -27,6 +27,17 @@ Recovery kinds (resilience enabled — docs/resilience.md):
   degradation         {step, tier, n_alive, roster_size}
                                               (tier: continue|shrink|pause,
                                                emitted on transitions only)
+
+Calibration kinds (recalibration armed — docs/calibration.md):
+
+  model_drift         {step, deviation, model_version}
+                                              (CUSUM confirmed a persistent
+                                               prediction/measurement shift)
+  model_refit         {step, model_version, old_speed, new_speed, n_obs}
+                                              (the cluster_speed estimator
+                                               refit from profiler history;
+                                               model_version is the new
+                                               ModelStore version)
 
 Subscribe to a specific kind or to "*" for everything. Handlers run inline
 on the training thread — keep them cheap. A handler that raises is

@@ -34,7 +34,6 @@ from repro.core.perf_model.cluster_model import (Eq4Inputs, PSBottleneckModel,
                                                  WorkerSpec, cluster_speed,
                                                  expected_revocations,
                                                  predict_total_time)
-from repro.core.perf_model.speed_model import calibrate_generators
 from repro.core.scheduler import LaunchPlan, plan_launch
 from repro.core.trainer import MembershipEvent, TrainReport, TransientTrainer
 from repro.core.transient.fleet import (FleetEnsemble, FleetSim, SimResult,
@@ -96,6 +95,7 @@ class Session:
         self._last_state = None     # final TrainState of the last train()
         self._gens = None           # lazily calibrated §III generators
         self._n_tensors = None      # lazily counted parameter-tree leaves
+        self._models = None         # lazily built calibration ModelStore
 
     # ------------------------------------------------------------ creation
     @classmethod
@@ -151,9 +151,24 @@ class Session:
         return self._n_tensors
 
     # ------------------------------------------------------ §III speed
+    @property
+    def models(self):
+        """The session's calibration `ModelStore` (docs/calibration.md):
+        every predictor resolves through this one handle. Seeded from the
+        static paper calibrations — the exact memoized instances, so the
+        unarmed path stays bit-identical — and updated in place by the
+        `Recalibrator` when `train(recalibration=...)` is armed."""
+        if self._models is None:
+            from repro.calibration import ModelStore
+            self._models = ModelStore.with_static_calibrations()
+        return self._models
+
     def _generators(self):
         if self._gens is None:
-            self._gens = calibrate_generators()
+            store = self.models
+            self._gens = {name.split("/", 1)[1]: store.current(name)
+                          for name in store.names()
+                          if name.startswith("step_time/")}
         return self._gens
 
     def _provider(self, provider: Optional[object]) -> FleetProvider:
@@ -459,7 +474,8 @@ class Session:
               workers: Optional[List[WorkerSpec]] = None,
               worker_step_times: Optional[List[float]] = None,
               clock=None,
-              resilience: Optional[object] = None) -> TrainReport:
+              resilience: Optional[object] = None,
+              recalibration: Optional[object] = None) -> TrainReport:
         """Run the transient-aware elastic trainer; profiler + Controller
         observations stream onto `self.bus`.
 
@@ -483,6 +499,13 @@ class Session:
         checkpoint saves/restores with checksum validation and
         generation fallback, retried replacement joins, and quorum-based
         degradation (docs/resilience.md).
+        `recalibration` (a `repro.calibration.RecalibrationConfig`;
+        default: the session `run.recalibration`) arms the online
+        drift/refit loop: CUSUM drift detection over Controller
+        deviations, `model_drift`/`model_refit` events on the bus, and
+        the refit `cluster_speed` estimator versioned in `self.models`
+        (docs/calibration.md). Unarmed (None), every static calibration
+        is bit-identical to the pre-calibration-layer behavior.
         """
         if mode == "async_ps":
             # the §II emulation has no checkpointing, membership events or
@@ -492,7 +515,8 @@ class Session:
             unsupported = {"events": events, "checkpoint_dir": checkpoint_dir,
                            "predicted_speed": predicted_speed,
                            "ps_model": ps_model, "workers": workers,
-                           "resilience": resilience}
+                           "resilience": resilience,
+                           "recalibration": recalibration}
             bad = sorted(k for k, v in unsupported.items() if v)
             if bad:
                 raise ValueError(
@@ -520,6 +544,14 @@ class Session:
                                                  self.arch))
         src = source_for_config(self.cfg, seq_len, seed=run.seed)
         loader = ShardedLoader(src, global_batch)
+        recal_cfg = (run.recalibration if recalibration is None
+                     else recalibration)
+        recalibrator = None
+        if recal_cfg is not None:
+            from repro.calibration import Recalibrator
+            recalibrator = Recalibrator(config=recal_cfg, store=self.models)
+            if getattr(recal_cfg, "trace_path", None):
+                recalibrator.ingest_trace()
         trainer = TransientTrainer(
             self.cfg, run, loader,
             members=[Member(i) for i in range(members)], holder=holder,
@@ -527,7 +559,8 @@ class Session:
             on_event=lambda kind, payload: self.bus.emit(kind, **payload),
             ps_model=ps_model, workers=workers, clock=clock,
             resilience=(run.resilience if resilience is None
-                        else resilience))
+                        else resilience),
+            recalibrator=recalibrator)
         self.trainer = trainer
         # NOTE: `run` (with the resolved checkpoint_dir) lives on the
         # trainer only — per-call overrides never mutate self.run

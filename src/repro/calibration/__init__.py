@@ -1,0 +1,27 @@
+"""`repro.calibration` — the unified calibration layer (docs/calibration.md).
+
+One `Estimator` protocol over every predictor in the repo, a versioned
+`ModelStore` replacing module-level calibration globals, CUSUM drift
+detection + online refit (`Recalibrator`), recorded-trace ingestion, and
+PROFET/Habitat-style transfer to unmeasured (gpu, region) cells.
+"""
+from .drift import CusumDetector
+from .estimator import (ClusterSpeedEstimator, Estimator, params_hash,
+                        score_predictions)
+from .recalibrator import RecalibrationConfig, Recalibrator
+from .store import ModelStore, Snapshot
+from .traces import (TraceEvent, eviction_hazard_windows,
+                     lifetimes_from_trace, load_trace, parse_trace,
+                     price_hazard_windows)
+from .transfer import (fit_p24_effects, holdout_p24_report,
+                       transfer_lifetime_model, transfer_p24,
+                       transfer_step_time_model)
+
+__all__ = [
+    "ClusterSpeedEstimator", "CusumDetector", "Estimator", "ModelStore",
+    "RecalibrationConfig", "Recalibrator", "Snapshot", "TraceEvent",
+    "eviction_hazard_windows", "fit_p24_effects", "holdout_p24_report",
+    "lifetimes_from_trace", "load_trace", "params_hash", "parse_trace",
+    "price_hazard_windows", "score_predictions", "transfer_lifetime_model",
+    "transfer_p24", "transfer_step_time_model",
+]

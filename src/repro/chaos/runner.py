@@ -223,6 +223,25 @@ def _run_live(session, sc: Scenario, seed: int) -> Dict[str, object]:
                            "fallback_depth": rep.fallback_depth,
                            "paused_steps": rep.paused_steps,
                            "fallback_drill": _fallback_drill(child.trainer)}
+    if child.run.recalibration is not None:
+        # drift scorecard (docs/calibration.md): the refit ledger plus the
+        # first check *after* the last refit — if the refit worked, that
+        # deviation is back inside the controller threshold while the
+        # fault is still active
+        post_dev = None
+        if rep.refits:
+            last = rep.refits[-1]["step"]
+            after = [p["deviation"] for k, p in history
+                     if k == "detection" and p["step"] > last
+                     and p.get("deviation") is not None]
+            if after:
+                post_dev = round(float(after[0]), 6)
+        out["recalibration"] = {
+            "drift_events": rep.drift_events,
+            "refits": rep.refits,
+            "model_version": child.trainer.controller.model_version,
+            "post_refit_deviation": post_dev,
+        }
     return out
 
 
@@ -322,6 +341,19 @@ def _check_expectations(sc: Scenario, card: Dict[str, object]) -> List[str]:
             fails.append("recovery ledger: "
                          f"{rec['save_failures']} save failure(s) but only "
                          f"{rec['gave_up']} exhausted-retry record(s)")
+    recal = live.get("recalibration")
+    if card.get("recalibration_armed") and recal is not None:
+        # recalib_* gates fire only when the run was armed with a
+        # RecalibrationConfig (the plain CI chaos sweep skips them)
+        gate("recalib_min_drift_events",
+             lambda v: len(recal["drift_events"]) >= v,
+             f"got {len(recal['drift_events'])}")
+        gate("recalib_min_refits", lambda v: len(recal["refits"]) >= v,
+             f"got {len(recal['refits'])}")
+        gate("recalib_max_post_refit_deviation",
+             lambda v: recal["post_refit_deviation"] is not None
+             and abs(recal["post_refit_deviation"]) <= v,
+             f"got {recal['post_refit_deviation']}")
     return fails
 
 
@@ -335,6 +367,7 @@ def run_scenario(sc: Scenario, *, session=None, engine: str = "batched",
     card: Dict[str, object] = {
         "scenario": sc.name, "description": sc.description, "seed": seed,
         "resilience_armed": session.run.resilience is not None,
+        "recalibration_armed": session.run.recalibration is not None,
         "sim": _run_sim(session, sc, engine, samples, seed),
         "live": (_run_live(session, sc, seed)
                  if live and sc.live is not None else None),

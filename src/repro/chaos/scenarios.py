@@ -198,19 +198,27 @@ def straggler() -> Scenario:
     return Scenario(
         name="straggler",
         description="slot 1 silently throttled to 30 % for 3 h (sim) / "
-                    "25 steps (live)",
+                    "40 steps (live)",
         faults=(StragglerFault(0.5, 3.0, slot=1, speed_factor=0.3),),
         live=LivePlan(
-            n_steps=60, check_every=5,
+            n_steps=80, check_every=5,
             faults=(LiveFault(25, "straggler",
                               {"slot": 1, "speed_factor": 0.3}),
-                    LiveFault(50, "straggler_end", {"slot": 1}))),
+                    LiveFault(65, "straggler_end", {"slot": 1}))),
         expect={"min_extra_time_s": 60.0,
                 "live_detected_all": True,
                 "live_max_latency_steps": 10,
                 "live_actions": [],        # no PS lever fits a straggler
                 "live_max_wrong_actions": 0,
-                "live_max_false_alarms": 0})
+                "live_max_false_alarms": 0,
+                # armed runs (--recalibrate): no lever fits a straggler the
+                # cluster keeps, so the *model* must adapt — CUSUM confirms
+                # the drift, the refit relearns the degraded speed from
+                # profiler history, and the next check lands back inside
+                # the controller's 6.7 % threshold
+                "recalib_min_drift_events": 1,
+                "recalib_min_refits": 1,
+                "recalib_max_post_refit_deviation": 0.067})
 
 
 @register_scenario
@@ -236,6 +244,31 @@ def ckpt_outage() -> Scenario:
                 "resilient_live_min_retries": 5,
                 "resilient_live_min_recovered_saves": 1,
                 "resilient_drill_ok": True})
+
+
+@register_scenario
+def recorded_trace() -> Scenario:
+    """Replay of a *recorded* eviction/price trace (docs/calibration.md
+    §traces): the bundled sample afternoon — an eviction cluster riding a
+    spot-price excursion in us-central1 — compiled into standard hazard
+    primitives by `TraceInjector`, so the replay inherits keyed draws,
+    engine parity and the smoke gates."""
+    import os
+
+    from repro.chaos.trace_injector import TraceInjector
+
+    inj = TraceInjector.from_file(
+        os.path.join(os.path.dirname(__file__), "data",
+                     "sample_trace.jsonl"),
+        n_workers=4, bid=0.10)
+    return Scenario(
+        name="recorded_trace",
+        description="replay of the bundled us-central1 afternoon trace: "
+                    "a 1 h eviction cluster (~3/h empirical hazard) inside "
+                    "a 1 h price excursion over the $0.10 bid",
+        faults=inj.faults(),
+        provider="gcp", region="us-central1",
+        expect={"min_extra_revocations": 1.0, "min_extra_time_s": 60.0})
 
 
 @register_scenario

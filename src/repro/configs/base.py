@@ -237,3 +237,7 @@ class RunConfig:
     # pre-resilience fail-fast behavior). Steers the outer training loop
     # and the fleet simulators, never the traced step function.
     resilience: Optional[object] = None
+    # online recalibration (repro.calibration.RecalibrationConfig; None =
+    # static calibrations, bit-identical to the pre-calibration-layer
+    # behavior). Like `resilience`, steers only the outer loop.
+    recalibration: Optional[object] = None

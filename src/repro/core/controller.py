@@ -33,6 +33,11 @@ class Detection:
     deviation: float
     action: Action
     note: str = ""
+    #: version of the `cluster_speed` estimator the check compared against
+    #: (0 = static prediction, no recalibration armed). Lets post-hoc
+    #: analysis tell "deviation against the stale model" from "deviation
+    #: against the refit one".
+    model_version: int = 0
 
 
 class Controller:
@@ -40,6 +45,9 @@ class Controller:
         self.threshold = threshold
         self.warmup_seconds = warmup_seconds
         self.log: List[Detection] = []
+        #: bumped by the recalibration loop on every refit; stamped into
+        #: each Detection so the log is auditable against the ModelStore
+        self.model_version = 0
 
     def check(self, profiler: PerformanceProfiler,
               predicted_speed: float,
@@ -48,12 +56,14 @@ class Controller:
         measured = profiler.speed()
         if measured is None or predicted_speed <= 0:
             det = Detection(False, measured, predicted_speed, 0.0, Action.NONE,
-                            "insufficient data / warming up")
+                            "insufficient data / warming up",
+                            model_version=self.model_version)
             self.log.append(det)
             return det
         dev = (predicted_speed - measured) / predicted_speed
         if dev <= self.threshold:
-            det = Detection(False, measured, predicted_speed, dev, Action.NONE)
+            det = Detection(False, measured, predicted_speed, dev, Action.NONE,
+                            model_version=self.model_version)
             self.log.append(det)
             return det
         # bottleneck: attribute it
@@ -82,7 +92,8 @@ class Controller:
                     note = ("aggregate worker speed exceeds PS capacity "
                             f"{over} despite "
                             f"{ps_model.compression} compression")
-        det = Detection(True, measured, predicted_speed, dev, action, note)
+        det = Detection(True, measured, predicted_speed, dev, action, note,
+                        model_version=self.model_version)
         self.log.append(det)
         return det
 

@@ -65,7 +65,7 @@ def normalized_run(run) -> object:
     return dataclasses.replace(run, checkpoint_dir="",
                                checkpoint_interval=0, seed=0,
                                compilation_cache_dir="",
-                               resilience=None)
+                               resilience=None, recalibration=None)
 
 
 _PERSISTENT_DIR = None

@@ -116,3 +116,21 @@ class CheckpointTimePredictor:
     def predict_seconds(self, total_bytes: float) -> float:
         return float(max(0.0, self.lm.predict(
             np.array([[total_bytes / 1e6]]))[0]))
+
+    # Estimator protocol (repro.calibration) ------------------------------
+    def predict(self, total_bytes: float) -> float:
+        return self.predict_seconds(total_bytes)
+
+    def update(self, rows: List[CkptRow]) -> "CheckpointTimePredictor":
+        """Linear model on S_c: refit IS the online update (§IV-C)."""
+        return type(self).fit(rows)
+
+    def score(self, rows: List[CkptRow]) -> dict:
+        from repro.calibration.estimator import score_predictions
+        return score_predictions(
+            [r.t_c for r in rows],
+            [self.predict_seconds(r.s_c) for r in rows])
+
+    def params_hash(self) -> str:
+        from repro.calibration.estimator import params_hash
+        return params_hash("checkpoint_time", self.lm.w, self.lm.b)

@@ -79,6 +79,48 @@ class PSBottleneckModel:
     def is_bottlenecked(self, workers: Sequence[WorkerSpec]) -> bool:
         return sum(w.speed for w in workers) > self.capacity_steps_per_s()
 
+    # Estimator protocol (repro.calibration) ------------------------------
+    @classmethod
+    def fit(cls, rows: Sequence[dict], model_bytes: float,
+            n_ps: int = 1, n_tensors: int = 0,
+            compression: str = "none") -> "PSBottleneckModel":
+        """Calibrate the PS bandwidth from observed saturated-cluster
+        updates/s (rows: {capacity_steps_per_s}); the RPC term keeps its
+        Table III calibration (it needs per-tensor timing we don't
+        observe in aggregate)."""
+        caps = [float(r["capacity_steps_per_s"]) for r in rows
+                if float(r.get("capacity_steps_per_s", 0.0)) > 0]
+        if not caps:
+            raise ValueError("PSBottleneckModel.fit: no positive observed "
+                             "capacities")
+        cap = float(np.median(caps))
+        # invert service = max(net, rpc)/n_ps for ps_bw; only valid when
+        # the network term dominates (otherwise capacity pins down rpc)
+        ratio = compression_ratio(compression)
+        ps_bw = 2.0 * model_bytes * ratio * cap / n_ps
+        return cls(model_bytes=model_bytes, n_ps=n_ps, ps_bw=ps_bw,
+                   n_tensors=n_tensors, compression=compression)
+
+    def predict(self, workers: Sequence[WorkerSpec]) -> float:
+        return self.cluster_speed(workers)
+
+    def update(self, rows: Sequence[dict]) -> "PSBottleneckModel":
+        return type(self).fit(rows, self.model_bytes, n_ps=self.n_ps,
+                              n_tensors=self.n_tensors,
+                              compression=self.compression)
+
+    def score(self, rows: Sequence[dict]) -> Dict[str, float]:
+        from repro.calibration.estimator import score_predictions
+        caps = [float(r["capacity_steps_per_s"]) for r in rows]
+        return score_predictions(caps,
+                                 [self.capacity_steps_per_s()] * len(caps))
+
+    def params_hash(self) -> str:
+        from repro.calibration.estimator import params_hash
+        return params_hash("ps_capacity", self.model_bytes, self.n_ps,
+                           self.ps_bw, self.n_tensors, self.rpc_per_tensor,
+                           self.compression)
+
 
 def cluster_speed(workers: Sequence[WorkerSpec],
                   ps: Optional[PSBottleneckModel] = None) -> float:

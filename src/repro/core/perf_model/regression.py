@@ -11,11 +11,18 @@ import numpy as np
 
 
 def mae(y_true, y_pred) -> float:
-    return float(np.mean(np.abs(np.asarray(y_true) - np.asarray(y_pred))))
+    y_true = np.asarray(y_true, float)
+    if y_true.size == 0:
+        raise ValueError("mae: empty input")
+    return float(np.mean(np.abs(y_true - np.asarray(y_pred))))
 
 
 def mape(y_true, y_pred) -> float:
     y_true = np.asarray(y_true, float)
+    if y_true.size == 0:
+        raise ValueError("mape: empty input")
+    if not np.any(np.abs(y_true) > 0):
+        raise ValueError("mape: all targets are zero (undefined denominator)")
     return float(np.mean(np.abs(y_true - np.asarray(y_pred))
                          / np.maximum(np.abs(y_true), 1e-12))) * 100.0
 
@@ -81,6 +88,11 @@ def kfold_mae(fit_fn: Callable, X, y, k: int = 5, seed: int = 0
     if X.shape[0] != len(y):
         X = X.T
     y = np.asarray(y, float)
+    if y.size == 0:
+        raise ValueError("kfold_mae: empty input")
+    if k < 2 or k > y.size:
+        raise ValueError(f"kfold_mae: k={k} invalid for n={y.size} "
+                         "(need 2 <= k <= n, else a fold is empty)")
     folds = kfold_indices(len(y), k, seed)
     maes = []
     for i in range(k):

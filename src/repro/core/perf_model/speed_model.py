@@ -65,6 +65,51 @@ class GPUStepTimeModel:
         t = self.step_time(c_m_gflops)
         return np.maximum(1e-4, rng.normal(t, STEP_TIME_COV * t, size=n))
 
+    # Estimator protocol (repro.calibration) ------------------------------
+    @classmethod
+    def fit(cls, rows: List[dict], gpu: str) -> "GPUStepTimeModel":
+        """Calibrate anchors from measurement rows ({c_m, step_time});
+        repeated observations of one C_m average into one anchor."""
+        sel = [r for r in rows if r.get("gpu", gpu) == gpu]
+        if not sel:
+            raise ValueError(f"GPUStepTimeModel.fit: no rows for {gpu!r}")
+        by_c: Dict[float, List[float]] = {}
+        for r in sel:
+            by_c.setdefault(float(r["c_m"]), []).append(float(r["step_time"]))
+        if len(by_c) < 2:
+            raise ValueError("GPUStepTimeModel.fit: need >= 2 distinct C_m "
+                             "anchors for interpolation")
+        c = np.array(sorted(by_c))
+        t = np.array([float(np.mean(by_c[ci])) for ci in c])
+        return cls(gpu, c, t)
+
+    def predict(self, c_m_gflops: float) -> float:
+        return self.step_time(c_m_gflops)
+
+    def update(self, rows: List[dict]) -> "GPUStepTimeModel":
+        """Online refresh: rescale the anchor curve by the median observed
+        /predicted step-time ratio (shape is Table I's; level is live)."""
+        ratios = [float(r["step_time"]) / self.step_time(float(r["c_m"]))
+                  for r in rows if r.get("gpu", self.gpu) == self.gpu]
+        if not ratios:
+            raise ValueError("GPUStepTimeModel.update: no rows for "
+                             f"{self.gpu!r}")
+        scale = float(np.median(ratios))
+        return type(self)(self.gpu, self.c_anchors.copy(),
+                          self.t_anchors * scale)
+
+    def score(self, rows: List[dict]) -> Dict[str, float]:
+        from repro.calibration.estimator import score_predictions
+        sel = [r for r in rows if r.get("gpu", self.gpu) == self.gpu]
+        return score_predictions(
+            [r["step_time"] for r in sel],
+            [self.step_time(float(r["c_m"])) for r in sel])
+
+    def params_hash(self) -> str:
+        from repro.calibration.estimator import params_hash
+        return params_hash("step_time", self.gpu, self.c_anchors,
+                           self.t_anchors)
+
 
 _GENERATOR_CACHE: Optional[Dict[str, GPUStepTimeModel]] = None
 
@@ -192,3 +237,25 @@ class WorkerSpeedPredictor:
 
     def speed(self, c_m: float) -> float:
         return 1.0 / self.step_time(c_m)
+
+    # Estimator protocol (repro.calibration) ------------------------------
+    def predict(self, c_m: float) -> float:
+        return self.step_time(c_m)
+
+    def update(self, rows: List[dict]) -> "WorkerSpeedPredictor":
+        """Full SVR refit from fresh rows (§IV-C: the SVR is cheap enough
+        to retrain on a monitoring cadence)."""
+        return type(self).fit(rows, self.gpu)
+
+    def score(self, rows: List[dict]) -> Dict[str, float]:
+        from repro.calibration.estimator import score_predictions
+        sel = [r for r in rows if r.get("gpu", self.gpu) == self.gpu]
+        return score_predictions(
+            [r["step_time"] for r in sel],
+            [self.step_time(float(r["c_m"])) for r in sel])
+
+    def params_hash(self) -> str:
+        from repro.calibration.estimator import params_hash
+        return params_hash("worker_speed", self.gpu, self.lo, self.hi,
+                           self.svr.kernel, self.svr.beta_, self.svr.b_,
+                           self.svr.X_)

@@ -76,3 +76,20 @@ class PerformanceProfiler:
         if sp is None:
             return None
         return (1.0 / sp) if sp > 0 else float("inf")
+
+    def history(self) -> List[dict]:
+        """Export records as plain dicts — the calibration layer's refit
+        input (`ClusterSpeedEstimator.fit`) and the Session's profiler
+        history surface. Plain data, so consumers can serialize it."""
+        return [{"t": r.t, "step": r.step, "loss": r.loss}
+                for r in self.records]
+
+    def recent_speed(self, last: int) -> Optional[float]:
+        """Steps/s over the trailing `last` records only — what a refit
+        wants after a regime change (the full-window `speed()` still
+        averages across the shift)."""
+        rs = self.records[-max(int(last), 2):]
+        if len(rs) < 2:
+            return None
+        span = rs[-1].t - rs[0].t
+        return (rs[-1].step - rs[0].step) / span if span > 0 else None

@@ -71,6 +71,9 @@ class TrainReport:
     fallback_depth: int = 0             # checkpoint generations skipped
     paused_steps: int = 0               # step slots skipped below quorum
     degradations: List[dict] = dataclasses.field(default_factory=list)
+    #: online-recalibration ledgers (recalibration armed; docs/calibration.md)
+    drift_events: List[dict] = dataclasses.field(default_factory=list)
+    refits: List[dict] = dataclasses.field(default_factory=list)
 
 
 class TransientTrainer:
@@ -85,7 +88,8 @@ class TransientTrainer:
                  mitigation_scheme: str = "int8",
                  max_mitigations: int = 8,
                  clock: Optional[Callable[[], float]] = None,
-                 resilience: Optional[ResilienceConfig] = None):
+                 resilience: Optional[ResilienceConfig] = None,
+                 recalibrator: Optional[object] = None):
         self.cfg = cfg
         self.run = run
         self.loader = loader
@@ -134,6 +138,14 @@ class TransientTrainer:
         self.fallback_depth = 0
         self.paused_steps = 0
         self.degradations: List[dict] = []
+        # online recalibration (docs/calibration.md): None keeps the
+        # static-prediction path byte-identical (golden contract)
+        self.recalibrator = recalibrator
+        if recalibrator is not None:
+            recalibrator.bind(self._emit)
+            if predicted_speed:
+                recalibrator.seed(predicted_speed)
+            self.controller.model_version = recalibrator.version
         self._rebuild_step()
         self.detections: List[Detection] = []
 
@@ -334,13 +346,28 @@ class TransientTrainer:
                 self._emit("detection", {"step": step,
                                          "bottleneck": det.bottleneck,
                                          "action": det.action.value,
-                                         "deviation": det.deviation})
+                                         "deviation": det.deviation,
+                                         "model_version": det.model_version})
+                mitigated = False
                 if self.auto_mitigate and det.action in (
                         Action.ADD_PARAMETER_SERVER,
                         Action.ENABLE_COMPRESSION) \
                         and len(self.mitigations) < self.max_mitigations:
                     state = self.apply_mitigation(det.action, state,
                                                   step=step)
+                    mitigated = True
+                if self.recalibrator is not None:
+                    if mitigated:
+                        # mitigation changed the cluster; deviation against
+                        # the pre-mitigation prediction is void drift input
+                        self.recalibrator.notify_mitigation(step)
+                    else:
+                        dev = (det.deviation if det.measured is not None
+                               else None)
+                        new_speed = self.recalibrator.observe(
+                            step, dev, self.profiler)
+                        if new_speed is not None:
+                            self._apply_refit(new_speed, step)
             # 5. checkpoint
             if self.run.checkpoint_interval and \
                     (step + 1) % self.run.checkpoint_interval == 0:
@@ -357,7 +384,11 @@ class TransientTrainer:
             checkpoint_failures=self.ckpt_failures, faults=self.faults,
             retries=self.retries, recovered_saves=self.recovered_saves,
             fallback_depth=self.fallback_depth,
-            paused_steps=self.paused_steps, degradations=self.degradations)
+            paused_steps=self.paused_steps, degradations=self.degradations,
+            drift_events=(list(self.recalibrator.drift_events)
+                          if self.recalibrator is not None else []),
+            refits=(list(self.recalibrator.refits)
+                    if self.recalibrator is not None else []))
         return state, report
 
     def _join_member(self, ev: "MembershipEvent"):
@@ -423,6 +454,17 @@ class TransientTrainer:
             self.recovered_saves += 1
         self._emit("checkpoint", {"step": step, "sizes": sizes})
         return 1
+
+    # ------------------------------------------------------------- refit
+    def _apply_refit(self, new_speed: float, step: int) -> None:
+        """Adopt a drift-triggered refit: the controller now compares
+        against the refit prediction (and stamps its new version), and
+        the measurement window restarts so the next check is refit-vs-
+        post-drift data, not refit-vs-straddled history."""
+        self.predicted_speed = new_speed
+        self.controller.model_version = self.recalibrator.version
+        self.profiler.records.clear()
+        self.profiler._win.clear()
 
     # ---------------------------------------------------- chaos injection
     def inject_fault(self, kind: str, step: int = 0, **payload) -> None:

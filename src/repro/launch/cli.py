@@ -124,6 +124,47 @@ def resilience_from_args(args: argparse.Namespace):
                             seed=getattr(args, "seed", 0) or 0)
 
 
+def add_recalib_args(p: argparse.ArgumentParser) -> None:
+    """Online-recalibration flags (docs/calibration.md). Unarmed unless
+    `--recalibrate` is passed; `recalib_from_args` then returns None and
+    every static calibration stays bit-identical."""
+    g = p.add_argument_group("recalibration")
+    g.add_argument("--recalibrate", action="store_true",
+                   help="arm CUSUM drift detection + online refit of the "
+                        "cluster-speed model from profiler history")
+    g.add_argument("--drift-threshold", type=float, default=None,
+                   help="CUSUM alarm level on accumulated deviation "
+                        "(default 0.15)")
+    g.add_argument("--drift-allowance", type=float, default=None,
+                   help="per-check deviation slack before the CUSUM "
+                        "statistic accumulates (default 0.05)")
+    g.add_argument("--refit-window", type=int, default=None,
+                   help="trailing profiler records a refit consumes "
+                        "(default 6)")
+    g.add_argument("--recalib-trace", default=None,
+                   help="recorded provider trace (JSONL) to refit "
+                        "lifetime laws from at startup")
+
+
+def recalib_from_args(args: argparse.Namespace):
+    """`RecalibrationConfig` from the add_recalib_args namespace, or None
+    when --recalibrate was not passed (exact static behavior)."""
+    if not getattr(args, "recalibrate", False):
+        return None
+    from repro.calibration import RecalibrationConfig
+    cfg = RecalibrationConfig()
+    picked = {}
+    if getattr(args, "drift_threshold", None) is not None:
+        picked["drift_threshold"] = args.drift_threshold
+    if getattr(args, "drift_allowance", None) is not None:
+        picked["drift_allowance"] = args.drift_allowance
+    if getattr(args, "refit_window", None) is not None:
+        picked["refit_window"] = args.refit_window
+    if getattr(args, "recalib_trace", None) is not None:
+        picked["trace_path"] = args.recalib_trace
+    return dataclasses.replace(cfg, **picked)
+
+
 def add_serve_args(p: argparse.ArgumentParser) -> None:
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--prompt-len", type=int, default=32)
@@ -175,6 +216,9 @@ def run_config_from_args(args: argparse.Namespace) -> RunConfig:
     res = resilience_from_args(args)
     if res is not None:
         picked["resilience"] = res
+    recal = recalib_from_args(args)
+    if recal is not None:
+        picked["recalibration"] = recal
     return dataclasses.replace(base, **picked)
 
 

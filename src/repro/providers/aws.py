@@ -100,6 +100,14 @@ class PriceSignalLifetime(LifetimeLaw):
         # survived the sampling window
         return np.interp(target, cum, ts, right=np.inf)
 
+    def params_hash(self) -> str:
+        # override the LifetimeLaw default: include the derived
+        # base_hazard (the fitted quantity) and skip the grid cache
+        from repro.calibration.estimator import params_hash
+        return params_hash("price_signal", self.region, self.gpu, self.p24,
+                           self.peak_hour, self.amplitude, self.horizon_h,
+                           self.base_hazard)
+
     #: single-column consumption: one uniform through the inverse
     #: cumulative hazard (keeps the engines' pre-drawn pools minimal)
     SAMPLE_UNIFORMS_K = 1

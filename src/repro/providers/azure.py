@@ -65,6 +65,14 @@ class TieredEvictionLifetime(LifetimeLaw):
         t = rng.exponential(1.0 / self.hazard_per_h, size=n)
         return np.where(t > self.horizon_h, np.inf, t)
 
+    def params_hash(self) -> str:
+        # override the LifetimeLaw default: the tier resolves to the
+        # fitted (p24, hazard) pair — hash those, not just the label
+        from repro.calibration.estimator import params_hash
+        return params_hash("tiered_eviction", self.region, self.gpu,
+                           self.tier, self.horizon_h, self.p24,
+                           self.hazard_per_h)
+
     #: single-column consumption: one uniform through the inverse
     #: exponential CDF (keeps the engines' pre-drawn pools minimal)
     SAMPLE_UNIFORMS_K = 1

@@ -25,6 +25,7 @@ import pytest
 # runs them on push; `python -m pytest` with no -m filter runs everything.
 _SLOW_NODE_IDS = {
     "test_api_session.py::test_train_emits_bus_events",
+    "test_calibration.py::test_live_straggler_drift_refit_restores_prediction",
     "test_chaos.py::test_live_ps_crash_walks_the_compression_ladder",
     "test_checkpoint.py::test_restore_resumes_training_state",
     "test_docs.py::test_readme_snippets_execute",

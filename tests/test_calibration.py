@@ -1,0 +1,331 @@
+"""Calibration layer tests (docs/calibration.md): the Estimator protocol
+across the prediction stack, the versioned ModelStore, CUSUM drift
+detection -> refit end-to-end (unit level and through the live chaos
+trainer), the PROFET/Habitat-style transfer path against held-out
+calibrated cells, recorded-trace ingestion/replay, and the unarmed-mode
+golden-parity contract (static calibrations stay bit-identical)."""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.calibration import (ClusterSpeedEstimator, CusumDetector,
+                               Estimator, ModelStore, RecalibrationConfig,
+                               Recalibrator, TraceEvent, fit_p24_effects,
+                               holdout_p24_report, lifetimes_from_trace,
+                               parse_trace, score_predictions,
+                               transfer_lifetime_model, transfer_p24,
+                               transfer_step_time_model)
+from repro.calibration.traces import (eviction_hazard_windows,
+                                      price_hazard_windows)
+from repro.core.perf_model.regression import kfold_mae, mae, mape, ols_fit
+from repro.core.perf_model.speed_model import (GPUStepTimeModel,
+                                               calibrate_generators)
+
+
+# ------------------------------------------------------------ protocol
+def test_estimator_protocol_adopted_across_the_stack():
+    from repro.core.perf_model.checkpoint_model import (
+        CheckpointTimePredictor, CkptRow)
+    from repro.core.perf_model.cluster_model import PSBottleneckModel
+    from repro.core.transient.revocation import LifetimeModel
+
+    ckpt_rows = [CkptRow(f"m{i}", s, s / 10, s / 100, 1.0 + s / 1e9)
+                 for i, s in enumerate(np.linspace(1e8, 4e9, 8))]
+    adopters = [
+        calibrate_generators()["v100"],
+        CheckpointTimePredictor.fit(ckpt_rows),
+        PSBottleneckModel(1.87e6, 1, ps_bw=1e9),
+        LifetimeModel.fit("us-central1", "v100",
+                          np.array([1.0, 2.0, 5.0, np.inf])),
+        ClusterSpeedEstimator(speed=27.4),
+    ]
+    for est in adopters:
+        assert isinstance(est, Estimator), type(est)
+        assert isinstance(est.params_hash(), str)
+    # provider laws expose residuals + score on top of the protocol:
+    # n = finite (uncensored) observations on the base LifetimeLaw path
+    from repro.providers import get_provider
+    law = get_provider("aws").lifetime_model("us-east-1", "v100")
+    assert law.residuals(np.array([1.0, 3.0, 10.0, np.inf])).shape == (3,)
+    sc = law.score(np.array([1.0, 3.0, 10.0, np.inf]))
+    assert set(sc) >= {"n", "mae", "max_abs"} and sc["n"] == 3
+    assert isinstance(law.params_hash(), str)
+    with pytest.raises(ValueError, match="no finite"):
+        law.score(np.array([np.inf]))
+
+
+def test_params_hash_is_stable_and_parameter_sensitive():
+    m = calibrate_generators()["v100"]
+    assert m.params_hash() == m.params_hash()
+    bumped = GPUStepTimeModel(m.gpu, np.asarray(m.c_anchors, float).copy(),
+                              np.asarray(m.t_anchors, float) * 1.01)
+    assert bumped.params_hash() != m.params_hash()
+
+
+def test_cluster_speed_estimator_fit_and_guards():
+    recs = [{"t": float(i) * 0.05, "step": i, "loss": 1.0}
+            for i in range(5)]
+    est = ClusterSpeedEstimator.fit(recs)
+    assert est.predict() == pytest.approx(20.0)
+    assert est.n_obs == 5 and est.source == "refit"
+    with pytest.raises(ValueError, match="2 records"):
+        ClusterSpeedEstimator.fit(recs[:1])
+    with pytest.raises(ValueError, match="zero time span"):
+        ClusterSpeedEstimator.fit([{"t": 1.0, "step": 1},
+                                   {"t": 1.0, "step": 2}])
+    with pytest.raises(ValueError, match="no observations"):
+        score_predictions([], [])
+
+
+# ----------------------------------------------------------- ModelStore
+def test_model_store_versioning_snapshot_and_rollback():
+    store = ModelStore()
+    a = ClusterSpeedEstimator(speed=100.0)
+    b = ClusterSpeedEstimator(speed=82.5, n_obs=6, source="refit")
+    assert store.register("cluster_speed", a) == 1
+    with pytest.raises(ValueError, match="already registered"):
+        store.register("cluster_speed", a)
+    assert store.update("cluster_speed", b) == 2
+    assert store.current("cluster_speed") is b
+    assert store.at_version("cluster_speed", 1) is a
+    # rollback reinstates the old estimator as a NEW version (append-only)
+    assert store.rollback("cluster_speed") == 3
+    assert store.current("cluster_speed") is a
+    assert store.version("cluster_speed") == 3
+    trail = store.snapshots("cluster_speed")
+    assert [v for v, _ in trail] == [1, 2, 3]
+    assert trail[0][1] == trail[2][1] != trail[1][1]   # hash = calibration
+    with pytest.raises(KeyError, match="unknown model"):
+        store.current("nope")
+    with pytest.raises(ValueError, match="no version 9"):
+        store.rollback("cluster_speed", 9)
+
+
+def test_store_seeds_from_the_exact_memoized_calibrations():
+    """Golden parity: resolving step-time models through the store hands
+    back the *same objects* as the module-global path, so the unarmed
+    prediction stack is bit-identical by construction."""
+    store = ModelStore.with_static_calibrations()
+    gens = calibrate_generators()
+    assert {n for n in store.names() if n.startswith("step_time/")} \
+        == {f"step_time/{g}" for g in gens}
+    for gpu, gen in gens.items():
+        assert store.current(f"step_time/{gpu}") is gen
+        assert store.version(f"step_time/{gpu}") == 1
+
+
+def test_session_resolves_generators_through_its_store():
+    from repro.api import Session
+    s = Session.from_arch("qwen3-1.7b", smoke=True)
+    gens = calibrate_generators()
+    assert s.models.current("step_time/v100") is gens["v100"]
+    # Table I anchor via the store-resolved handle: bit-identical
+    assert s.models.current("step_time/v100").step_time(1.54) \
+        == gens["v100"].step_time(1.54)
+
+
+def test_unarmed_run_config_is_the_jit_cache_identity():
+    from repro.configs import RunConfig
+    from repro.core.jit_cache import normalized_run
+    armed = RunConfig(recalibration=RecalibrationConfig())
+    assert normalized_run(armed) == normalized_run(RunConfig())
+
+
+# ---------------------------------------------------------------- drift
+def test_cusum_accumulates_allowance_excess_and_resets_on_alarm():
+    det = CusumDetector(allowance=0.05, threshold=0.15)
+    assert not det.observe(0.04) and det.statistic == 0.0   # inside slack
+    assert not det.observe(None)                            # no measurement
+    assert not det.observe(0.12)                            # s = 0.07
+    assert not det.observe(0.12)                            # s = 0.14
+    assert det.observe(0.12)                                # s = 0.21 >= thr
+    assert det.statistic == 0.0                             # reset on alarm
+    assert len(det.alarms) == 1
+    # a one-off spike below threshold-in-one-step never fires
+    det2 = CusumDetector(allowance=0.05, threshold=0.15)
+    assert not det2.observe(0.12) and not det2.observe(0.0)
+
+
+def test_recalibrator_drift_refit_and_mitigation_reset():
+    class FakeProfiler:
+        def __init__(self, speed):
+            self.speed = speed
+
+        def history(self):
+            return [{"t": i / self.speed, "step": i, "loss": 1.0}
+                    for i in range(8)]
+
+    events = []
+    rec = Recalibrator(RecalibrationConfig(), store=ModelStore(),
+                       emit=lambda k, p: events.append((k, p)))
+    rec.seed(100.0)
+    assert rec.version == 1
+    prof = FakeProfiler(speed=80.0)   # true speed shifted 20 % down
+    assert rec.observe(5, 0.12, prof) is None     # s = 0.07
+    assert rec.observe(10, 0.12, prof) is None    # s = 0.14
+    new = rec.observe(15, 0.12, prof)             # s = 0.21 >= 0.15: alarm
+    assert new == pytest.approx(80.0)
+    assert [k for k, _ in events] == ["model_drift", "model_refit"]
+    assert rec.version == 2
+    assert rec.store.current("cluster_speed").source == "refit"
+    assert rec.refits[0]["old_speed"] == 100.0
+    assert rec.refits[0]["new_speed"] == pytest.approx(80.0)
+    # cooldown: the check right after a refit is skipped
+    assert rec.observe(20, 0.5, prof) is None
+    # a mitigation voids accumulated deviation instead of feeding it
+    rec.detector.s_pos = 0.14
+    rec.notify_mitigation(20)
+    assert rec.detector.statistic == 0.0
+
+
+def test_live_straggler_drift_refit_restores_prediction(tmp_path):
+    """End-to-end through the real trainer: an injected mid-run speed
+    shift must raise model_drift, refit from profiler history, and bring
+    the controller deviation back inside the paper's 6.7 % threshold —
+    with no false mitigation (the straggler gets no PS lever)."""
+    from repro.api import Session
+    from repro.chaos import get_scenario
+    from repro.chaos.runner import _run_live
+
+    session = Session.from_arch("qwen3-1.7b", smoke=True)
+    session.run = dataclasses.replace(
+        session.run, recalibration=RecalibrationConfig())
+    live = _run_live(session, get_scenario("straggler"), seed=0)
+    recal = live["recalibration"]
+    assert len(recal["drift_events"]) >= 1
+    assert len(recal["refits"]) >= 1
+    refit = recal["refits"][-1]
+    assert refit["new_speed"] < refit["old_speed"]       # learned the slowdown
+    assert recal["model_version"] >= 2
+    assert recal["post_refit_deviation"] is not None
+    assert abs(recal["post_refit_deviation"]) < 0.067
+    # drift must not corrupt detection/mitigation scoring
+    assert live["actions_applied"] == []
+    assert live["false_alarms"] == 0 and live["missed_detections"] == 0
+
+
+# ------------------------------------------------------------- transfer
+def test_step_time_transfer_predicts_held_out_gpu():
+    gens = calibrate_generators()
+    for target in ("p100", "v100", "k80"):
+        pred = transfer_step_time_model(target)
+        actual = gens[target]
+        errs = [abs(pred.step_time(float(c)) - actual.step_time(float(c)))
+                / actual.step_time(float(c))
+                for c in np.asarray(actual.c_anchors, float)]
+        assert float(np.mean(errs)) < 0.30, (target, errs)
+    with pytest.raises(KeyError, match="unknown gpu"):
+        transfer_step_time_model("h100")
+
+
+def test_lifetime_transfer_in_sample_signal_and_holdout_bound():
+    """Table V is interaction-dominated (us-west1 holds both the calmest
+    and the most brutal cell), so an additive region+gpu decomposition
+    cannot beat the grand mean *held out* on 12 cells — docs/calibration.md
+    says so explicitly. What the tests pin instead: in-sample the effects
+    must explain real variance (beat the grand-mean baseline), and the
+    leave-one-out error must stay inside the documented 0.3 bound so a
+    regression in the fit shows up."""
+    from repro.core.transient.revocation import TABLE5_RATES
+    observed = {k: v for k, v in TABLE5_RATES.items() if v is not None}
+    grand = float(np.mean(list(observed.values())))
+    naive_mae = float(np.mean([abs(grand - p)
+                               for p in observed.values()]))
+    eff = fit_p24_effects()
+    in_sample = float(np.mean([abs(transfer_p24(r, g, eff) - p)
+                               for (r, g), p in observed.items()]))
+    assert in_sample < naive_mae
+    rows = list(holdout_p24_report())
+    assert len(rows) >= 5
+    model_mae = float(np.mean([r["abs_err"] for r in rows]))
+    assert model_mae < 0.30
+    # filling a never-offered cell yields a usable LifetimeModel
+    p = transfer_p24("us-west1", "v100", eff)
+    assert 0.0 < p < 1.0
+    lm = transfer_lifetime_model("us-west1", "v100", eff)
+    assert lm.prob_revoked_within(24.0) == pytest.approx(p)
+    with pytest.raises(KeyError, match="never observed"):
+        transfer_p24("mars-east1", "v100", eff)
+
+
+# --------------------------------------------------------------- traces
+TRACE = """
+# comment line
+{"kind": "eviction", "t_h": 0.2, "lifetime_h": 0.2, "region": "r", "gpu": "v100"}
+{"kind": "eviction", "t_h": 0.8, "lifetime_h": 0.8, "region": "r", "gpu": "v100"}
+{"kind": "eviction", "t_h": 0.9, "lifetime_h": 0.9, "region": "r", "gpu": "v100"}
+{"kind": "eviction", "t_h": 9.0, "lifetime_h": 9.0, "region": "r", "gpu": "v100", "censored": true}
+{"kind": "price", "t_h": 0.0, "price": 0.08}
+{"kind": "price", "t_h": 1.0, "price": 0.15}
+{"kind": "price", "t_h": 2.0, "price": 0.12}
+{"kind": "price", "t_h": 3.0, "price": 0.09}
+"""
+
+
+def test_trace_parser_hazard_windows_and_lifetimes():
+    events = parse_trace(TRACE)
+    assert [e.t_h for e in events] == sorted(e.t_h for e in events)
+    lt = lifetimes_from_trace(events, region="r", gpu="v100")
+    assert lt.tolist()[:3] == [0.2, 0.8, 0.9] and np.isinf(lt[3])
+    ev = eviction_hazard_windows(events, n_workers=2, bucket_h=1.0)
+    # 3 evictions in [0,1) over 2 fleet-hours; the censored record is
+    # exposure, not an event
+    assert ev == [(0.0, 1.0, 1.5, "r")]
+    pw = price_hazard_windows(events, bid=0.10, hazard_per_excess=2.0)
+    assert len(pw) == 1
+    start, end, hz = pw[0]
+    assert (start, end) == (1.0, 3.0)
+    assert hz == pytest.approx(2.0 * np.mean([0.5, 0.2]))
+    with pytest.raises(ValueError, match="kind"):
+        TraceEvent.from_record({"kind": "meteor", "t_h": 1.0})
+    with pytest.raises(ValueError, match="not JSON"):
+        parse_trace("{nope}")
+
+
+def test_trace_injector_replays_the_bundled_scenario():
+    from repro.chaos import get_scenario
+    from repro.chaos.injectors import PreemptionWave, PriceSpike
+
+    sc = get_scenario("recorded_trace")
+    waves = [f for f in sc.faults if isinstance(f, PreemptionWave)]
+    spikes = [f for f in sc.faults if isinstance(f, PriceSpike)]
+    assert len(waves) == 2 and len(spikes) == 1
+    # 6 evictions per half-hour bucket / (4 workers * 0.5 h) = 3/h
+    assert all(w.hazard_per_h == pytest.approx(3.0) for w in waves)
+    assert all(w.region == "us-central1" for w in waves)
+    assert spikes[0].hazard_per_h > 0
+
+
+def test_recalibrator_ingests_trace_into_lifetime_models(tmp_path):
+    p = tmp_path / "trace.jsonl"
+    p.write_text(TRACE)
+    rec = Recalibrator(RecalibrationConfig(trace_path=str(p)),
+                       store=ModelStore())
+    written = rec.ingest_trace()
+    assert written == ["lifetime/trace/r/v100"]
+    lm = rec.store.current("lifetime/trace/r/v100")
+    # 3 of 4 recorded servers died inside the horizon
+    assert lm.p24 == pytest.approx(0.75)
+    # ingesting again refits as a new version, not a duplicate name
+    rec.ingest_trace()
+    assert rec.store.version("lifetime/trace/r/v100") == 2
+
+
+# ----------------------------------------------------- regression guards
+def test_regression_metrics_reject_degenerate_inputs():
+    with pytest.raises(ValueError, match="empty"):
+        mae([], [])
+    with pytest.raises(ValueError, match="empty"):
+        mape([], [])
+    with pytest.raises(ValueError, match="all targets are zero"):
+        mape([0.0, 0.0], [1.0, 2.0])
+    assert mape([2.0, 0.0], [2.0, 1.0]) >= 0.0   # partial zeros still fine
+    X = np.arange(10, dtype=float).reshape(-1, 1)
+    y = 2.0 * X[:, 0] + 1.0
+    with pytest.raises(ValueError, match="empty"):
+        kfold_mae(ols_fit, X[:0], y[:0])
+    with pytest.raises(ValueError, match="k=12 invalid"):
+        kfold_mae(ols_fit, X, y, k=12)
+    assert kfold_mae(ols_fit, X, y, k=5)[0] == pytest.approx(0.0, abs=1e-8)
