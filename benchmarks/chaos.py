@@ -17,6 +17,9 @@ def run():
     for name in list_scenarios():
         card = run_scenario(get_scenario(name), session=session,
                             samples=SAMPLES, seed=SEED, smoke=True)
+        if card["sim"] is None:
+            # serving scenario: scored by benchmarks/serving.py
+            continue
         imp = card["sim"]["impact"]
         par = card["sim"]["parity"]
         derived = (f"+${imp['extra_cost']:.2f} "

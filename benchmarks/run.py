@@ -36,6 +36,7 @@ MODULES = [
     "lm_speed_models",
     "chaos",
     "recalib",
+    "serving",
     "roofline",
 ]
 

@@ -33,10 +33,14 @@ def build_parser() -> argparse.ArgumentParser:
     cli.add_resilience_args(t)
     cli.add_recalib_args(t)
 
-    s = sub.add_parser("serve", help="prefill + token-by-token decode")
+    s = sub.add_parser("serve", help="prefill + token-by-token decode, or "
+                                     "--fleet SLO-aware serving planning")
     cli.add_arch_arg(s)
     cli.add_scale_args(s)
     cli.add_serve_args(s)
+    cli.add_serve_fleet_args(s)
+    # resilience flags shape the --fleet plan (drain/handover vs stock)
+    cli.add_resilience_args(s)
 
     for name, hlp in (("plan", "revocation-aware launch planning (§V-C)"),
                       ("simulate", "discrete-event fleet simulation (§VI-A)"),
@@ -172,6 +176,32 @@ def _cmd_serve(args) -> int:
     # encoder-only archs raise ValueError in serving.generate; main()
     # renders it as a clean error + exit 2
     session = cli.session_from_args(args)
+    if args.fleet:
+        from repro.serving import ServingSLO, ServingWorkload
+        workload = ServingWorkload(n_requests=args.requests,
+                                   arrival_rate_per_s=args.rate,
+                                   prompt_tokens=args.prompt_len,
+                                   max_tokens=args.tokens)
+        best, plans = session.plan_serving(
+            replica_counts=tuple(int(x) for x in
+                                 args.replica_counts.split(",")),
+            providers=tuple(args.providers.split(",")),
+            gpu=args.gpu, workload=workload,
+            slo=ServingSLO(p99_latency_s=args.slo_p99),
+            resilience=cli.resilience_from_args(args),
+            samples=args.plan_samples, seed=args.seed)
+        print(f"# serving plan: arch={args.arch} gpu={args.gpu} "
+              f"slo_p99={args.slo_p99}s requests={args.requests} "
+              f"@{args.rate}/s")
+        for p in plans:
+            mark = "*" if p is best else " "
+            print(f"{mark} {p.provider:<7s} {p.region:<16s} "
+                  f"x{p.replicas:<3d} slo={'ok ' if p.meets_slo else 'MISS'}"
+                  f" p50={p.latency_p50_s:7.3f}s p99={p.latency_p99_s:7.3f}s"
+                  f" completed={p.completed_frac:5.1%}"
+                  f" shed={p.shed_frac:5.1%} drop={p.drop_frac:5.1%}"
+                  f" ${p.cost_per_1k:.4f}/1k")
+        return 0
     rep = session.serve(args.tokens, batch=args.batch,
                         prompt_len=args.prompt_len,
                         temperature=args.temperature, seed=args.seed)
@@ -179,6 +209,8 @@ def _cmd_serve(args) -> int:
           f"prefill {rep.prompt_len} tok in {rep.prefill_seconds:.2f}s; "
           f"decode {rep.tokens_generated} tok in {rep.decode_seconds:.2f}s "
           f"({rep.tokens_per_second:.1f} tok/s)")
+    print(f"decode latency per token: p50={rep.decode_ms_p50:.2f}ms "
+          f"p95={rep.decode_ms_p95:.2f}ms p99={rep.decode_ms_p99:.2f}ms")
     print("sample tokens:", rep.sample_tokens)
     return 0
 

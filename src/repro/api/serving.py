@@ -1,19 +1,27 @@
-"""Programmatic serving loop: batched prefill + token-by-token decode
-against the KV cache / SSM state. Extracted from the old `launch/serve.py`
-launcher so `Session.serve` and the CLI share one implementation.
+"""Programmatic serving loop over the continuous-batching gateway.
+
+`generate()` keeps its old one-call surface (batched prefill + decode,
+shared `jit_cache` trace) but now runs through
+`repro.serving.GatewayEngine`: every request occupies a slot with its own
+decode position, so the same engine — and the same traced step — also
+backs staggered multi-tenant admission, not just the lockstep case.
+
+This refactor also retires a sampling bug the old loop carried: the first
+generated token was always `argmax`, even with `temperature > 0` (two
+seeds could never diverge before token 1). Sampling now happens in-trace
+behind one per-slot temperature gate for every token, the first included.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import jit_cache
-from repro.models import api
+from repro.serving.engine import GatewayEngine
 
 
 @dataclasses.dataclass
@@ -27,6 +35,10 @@ class ServeReport:
     tokens_per_second: float
     sample_tokens: List[int]
     generated: object  # (batch, tokens) array
+    #: per-iteration decode wall-time percentiles, milliseconds
+    decode_ms_p50: float = 0.0
+    decode_ms_p95: float = 0.0
+    decode_ms_p99: float = 0.0
 
 
 def generate(cfg: ModelConfig, params=None, *, batch: int = 4,
@@ -37,45 +49,42 @@ def generate(cfg: ModelConfig, params=None, *, batch: int = 4,
     consistent for every family — then sample `tokens` new tokens."""
     if cfg.family == "audio":
         raise ValueError("encoder-only arch has no decode path")
-    if params is None:
-        params, _ = api.init(cfg, jax.random.PRNGKey(0))
     max_len = prompt_len + tokens
-    state, _ = api.init_decode_state(cfg, batch, max_len)
+    eng = GatewayEngine(cfg, params, slots=batch, max_len=max_len,
+                        seed=seed)
 
-    key = jax.random.PRNGKey(seed)
     if prompt is None:
-        prompt = jax.random.randint(key, (batch, prompt_len), 0,
-                                    cfg.vocab_size)
+        prompt = jax.random.randint(jax.random.PRNGKey(seed),
+                                    (batch, prompt_len), 0, cfg.vocab_size)
+    for slot in range(batch):
+        eng.join(slot, rid=slot, prompt=[int(t) for t in prompt[slot]],
+                 max_new=tokens, temperature=temperature)
 
-    # the jitted decode step is memoized per ModelConfig: repeated
-    # Session.serve calls (and fresh Sessions on the same arch) reuse one
-    # traced callable instead of re-jitting every generate()
-    step = jit_cache.cached(
-        "decode_step", (cfg,),
-        lambda: jax.jit(lambda p, s, t, i: api.decode_step(p, cfg, s, t, i)))
-
+    # all slots prefill in lockstep: the first prompt_len iterations feed
+    # prompt tokens; the last of those emits each request's first token
+    out: Dict[int, List[int]] = {}
     t0 = time.monotonic()
-    logits = None
-    for i in range(prompt_len):
-        logits, state = step(params, state, prompt[:, i], jnp.int32(i))
+    for _ in range(prompt_len - 1):
+        eng.step()
     prefill_s = time.monotonic() - t0
 
-    toks = jnp.argmax(logits, -1)
-    out = [toks]
     t0 = time.monotonic()
-    for i in range(tokens - 1):
-        logits, state = step(params, state, toks, jnp.int32(prompt_len + i))
-        if temperature > 0:
-            key, sub = jax.random.split(key)
-            toks = jax.random.categorical(sub, logits / temperature, -1)
-        else:
-            toks = jnp.argmax(logits, -1)
-        out.append(toks)
+    n_prefill_steps = len(eng.step_seconds)
+    while eng.busy():
+        for ev in eng.step():
+            if ev["done"]:
+                out[ev["rid"]] = ev["tokens"]
     decode_s = time.monotonic() - t0
-    gen = jnp.stack(out, 1)
+
+    decode_times = eng.step_seconds[n_prefill_steps:]
+    eng.step_seconds = decode_times
+    pct = eng.decode_percentiles_ms()
+    gen = jnp.asarray([out[slot] for slot in range(batch)], jnp.int32)
     return ServeReport(
         arch=cfg.name, batch=batch, prompt_len=prompt_len,
         tokens_generated=tokens, prefill_seconds=prefill_s,
         decode_seconds=decode_s,
         tokens_per_second=tokens * batch / max(decode_s, 1e-9),
-        sample_tokens=gen[0, :10].tolist(), generated=gen)
+        sample_tokens=gen[0, :10].tolist(), generated=gen,
+        decode_ms_p50=pct["p50"], decode_ms_p95=pct["p95"],
+        decode_ms_p99=pct["p99"])

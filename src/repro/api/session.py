@@ -636,5 +636,59 @@ class Session:
         # checkpoint may lag by up to checkpoint_interval-1 steps)
         params = (self._last_state.params
                   if self._last_state is not None else None)
-        return generate(self.cfg, params, batch=batch, prompt_len=prompt_len,
-                        tokens=tokens, temperature=temperature, seed=seed)
+        report = generate(self.cfg, params, batch=batch,
+                          prompt_len=prompt_len, tokens=tokens,
+                          temperature=temperature, seed=seed)
+        self.bus.emit("serve", arch=report.arch, batch=report.batch,
+                      tokens=report.tokens_generated,
+                      tokens_per_second=round(report.tokens_per_second, 3),
+                      decode_ms_p50=round(report.decode_ms_p50, 4),
+                      decode_ms_p95=round(report.decode_ms_p95, 4),
+                      decode_ms_p99=round(report.decode_ms_p99, 4))
+        return report
+
+    def plan_serving(self, *,
+                     replica_counts=(2, 4, 8),
+                     providers=("gcp", "aws"),
+                     regions=None,
+                     gpu: str = "v100",
+                     workload=None,
+                     slo=None,
+                     batch_ceiling: int = 8,
+                     policy=None,
+                     resilience: Optional[object] = None,
+                     samples: int = 8,
+                     horizon_s: float = 3600.0,
+                     seed: int = 0):
+        """SLO-aware serving fleet planning (docs/serving.md).
+
+        The serving sibling of `plan()`: scores every (replica_count,
+        provider, region) cell with a full `ServingFleetSim` ensemble —
+        revocations from each market's lifetime law, drain/handover under
+        the session's resilience config — and ranks meets-SLO-first, then
+        cheapest $/1k completed requests. The per-token decode time comes
+        from this session's calibrated §III step-time model for `gpu`, so
+        the plan prices this model's actual decode speed, not a constant.
+        """
+        from repro.serving import (ServingSLO, ServingWorkload,
+                                   plan_serving)
+        workload = workload or ServingWorkload()
+        slo = slo or ServingSLO()
+        # decode-round seconds on `gpu`: one token across the batch costs
+        # one model step at the serving batch's complexity
+        token_time_s = 1.0 / self.predict_worker_speed(
+            gpu, seq_len=workload.prompt_tokens + workload.max_tokens,
+            per_worker_batch=batch_ceiling)
+        res = self.run.resilience if resilience is None else resilience
+        best, plans = plan_serving(
+            workload, slo, replica_counts=replica_counts,
+            providers=providers, regions=regions, gpu=gpu,
+            token_time_s=token_time_s, batch_ceiling=batch_ceiling,
+            policy=policy, resilience=res, horizon_s=horizon_s,
+            samples=samples, seed=seed)
+        self.bus.emit("plan_serving", gpu=gpu, cells=len(plans),
+                      best_provider=best.provider,
+                      best_replicas=best.replicas,
+                      best_meets_slo=best.meets_slo,
+                      best_cost_per_1k=best.cost_per_1k)
+        return best, plans

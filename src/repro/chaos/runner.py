@@ -137,6 +137,82 @@ def _run_sim(session, sc: Scenario, engine: str, samples: int,
     }
 
 
+def _serving_summary(results) -> Dict[str, object]:
+    from repro.serving import summarize_serving
+    return summarize_serving(results)
+
+
+def _run_serving(session, sc: Scenario, engine: str, samples: int,
+                 seed: int) -> Dict[str, object]:
+    """Serving-fleet scorecard for scenarios carrying a `ServingScript`.
+
+    Always runs the armed-vs-stock pair on the faulted fleet plus an
+    armed fault-free baseline, so the drop-delta and p99-inflation gates
+    hold in any CI invocation — arming here means the session's
+    ResilienceConfig when one is set, else the defaults."""
+    from repro.chaos.evaluator import score_serving
+    from repro.resilience import ResilienceConfig
+    from repro.serving import ReplicaSet, ServingFleetSim
+
+    spec = sc.serving
+    armed_cfg = session.run.resilience or ResilienceConfig()
+
+    def build(chaos: bool, resilience) -> ServingFleetSim:
+        rset = ReplicaSet(spec.replicas, sc.provider, region=sc.region,
+                          gpu=sc.gpu, seed=seed)
+        if chaos:
+            rset.chaos = sc.timeline(rset.roster(), seed=seed)
+        return ServingFleetSim(
+            rset, spec.workload, policy=spec.policy,
+            resilience=resilience, token_time_s=spec.token_time_s,
+            batch_ceiling=spec.batch_ceiling, horizon_s=spec.horizon_s,
+            seed=seed)
+
+    run_engine = engine if engine in ("batched", "event") else "batched"
+    armed = build(True, armed_cfg).run_many(samples, engine=run_engine)
+    stock = build(True, None).run_many(samples, engine=run_engine)
+    baseline = build(False, armed_cfg).run_many(samples, engine=run_engine)
+
+    # two-engine parity probe, same contract as the training sims: the
+    # batched candidate-array engine and the per-trajectory event heap
+    # must agree on every count and every latency
+    probe = "batched" if run_engine == "event" else run_engine
+    pa = build(True, armed_cfg).run_many(PARITY_SAMPLES, engine=probe)
+    pb = build(True, armed_cfg).run_many(PARITY_SAMPLES, engine="event")
+    counts_equal = all(
+        (a.completed, a.shed, a.dropped_inflight, a.dropped_warned,
+         a.handovers, a.requeues, a.hedges, a.revocations, a.replacements,
+         a.recovery_cycles)
+        == (b.completed, b.shed, b.dropped_inflight, b.dropped_warned,
+            b.handovers, b.requeues, b.hedges, b.revocations,
+            b.replacements, b.recovery_cycles)
+        for a, b in zip(pa, pb))
+    time_err = 0.0
+    for a, b in zip(pa, pb):
+        if a.latencies_s.shape != b.latencies_s.shape:
+            counts_equal = False
+            continue
+        if a.latencies_s.size:
+            time_err = max(time_err, float(np.max(
+                np.abs(a.latencies_s - b.latencies_s)
+                / np.maximum(b.latencies_s, 1e-9))))
+        time_err = max(time_err,
+                       abs(a.total_time_s - b.total_time_s)
+                       / max(b.total_time_s, 1e-9))
+
+    return {
+        "engine": run_engine, "samples": samples,
+        "replicas": spec.replicas,
+        "armed": _serving_summary(armed),
+        "stock": _serving_summary(stock),
+        "baseline": _serving_summary(baseline),
+        "impact": score_serving(armed, stock, baseline),
+        "parity": {"trajectories": PARITY_SAMPLES, "engine": probe,
+                   "counts_equal": counts_equal,
+                   "time_max_rel_err": time_err},
+    }
+
+
 def _run_live(session, sc: Scenario, seed: int) -> Dict[str, object]:
     """Drive the real trainer through the scenario's `LivePlan`."""
     from repro.api.session import Session
@@ -271,17 +347,41 @@ def _check_expectations(sc: Scenario, card: Dict[str, object]) -> List[str]:
     """Evaluate the scenario's smoke gates; returns failure strings."""
     fails: List[str] = []
     exp = sc.expect
+
+    def gate(key, ok, detail):
+        if key in exp and not ok(exp[key]):
+            fails.append(f"{key}={exp[key]}: {detail}")
+
+    serving = card.get("serving")
+    if serving is not None:
+        if not serving["parity"]["counts_equal"]:
+            fails.append("serving parity: per-trajectory counts differ")
+        if serving["parity"]["time_max_rel_err"] > 1e-6:
+            fails.append("serving parity: latencies diverge "
+                         f"({serving['parity']['time_max_rel_err']:.2e})")
+        simp = serving["impact"]
+        gate("serving_zero_dropped_warned",
+             lambda v: (not v) or simp["armed_dropped_warned"] == 0,
+             f"got {simp['armed_dropped_warned']} armed warned drops")
+        gate("serving_min_armed_drop_delta",
+             lambda v: simp["drop_delta"] >= v,
+             f"got {simp['drop_delta']}")
+        gate("serving_max_p99_inflation",
+             lambda v: simp["p99_inflation"] <= v,
+             f"got {simp['p99_inflation']}")
+        gate("serving_min_degraded_cycles",
+             lambda v: simp["recovery_cycles_total"] >= v,
+             f"got {simp['recovery_cycles_total']}")
+
     sim = card["sim"]
+    if sim is None:                 # serving-only scenario: no fleet sim
+        return fails
     imp = sim["impact"]
     if not sim["parity"]["counts_equal"]:
         fails.append("engine parity: per-trajectory counts differ")
     if sim["parity"]["time_max_rel_err"] > 1e-6:
         fails.append("engine parity: times diverge "
                      f"({sim['parity']['time_max_rel_err']:.2e})")
-
-    def gate(key, ok, detail):
-        if key in exp and not ok(exp[key]):
-            fails.append(f"{key}={exp[key]}: {detail}")
 
     gate("min_extra_revocations", lambda v: imp["extra_revocations"] >= v,
          f"got {imp['extra_revocations']}")
@@ -368,7 +468,12 @@ def run_scenario(sc: Scenario, *, session=None, engine: str = "batched",
         "scenario": sc.name, "description": sc.description, "seed": seed,
         "resilience_armed": session.run.resilience is not None,
         "recalibration_armed": session.run.recalibration is not None,
-        "sim": _run_sim(session, sc, engine, samples, seed),
+        # serving scenarios script faults over a ReplicaSet, not a
+        # training fleet — the per-worker training sim would be noise
+        "sim": (None if sc.serving is not None
+                else _run_sim(session, sc, engine, samples, seed)),
+        "serving": (_run_serving(session, sc, engine, samples, seed)
+                    if sc.serving is not None else None),
         "live": (_run_live(session, sc, seed)
                  if live and sc.live is not None else None),
     }

@@ -93,6 +93,9 @@ class Scenario:
     max_hours: float = 48.0
     handover: bool = True
     live: Optional[LivePlan] = None
+    #: a `repro.serving.ServingScript`: the scenario scripts faults over
+    #: a serving ReplicaSet instead of a training fleet (docs/serving.md)
+    serving: Optional[object] = None
     expect: Mapping = dataclasses.field(default_factory=dict)
 
     def timeline(self, roster, seed: int = 0) -> FaultTimeline:
@@ -269,6 +272,41 @@ def recorded_trace() -> Scenario:
         faults=inj.faults(),
         provider="gcp", region="us-central1",
         expect={"min_extra_revocations": 1.0, "min_extra_time_s": 60.0})
+
+
+@register_scenario
+def serve_wave() -> Scenario:
+    """Preemption wave over a *serving* ReplicaSet (docs/serving.md): a
+    4-replica continuous-batching fleet on AWS (2-minute revocation
+    warnings) takes a minutes-scale wave through an open-loop request
+    stream. The runner scores an armed-vs-stock delta: armed, warned
+    replicas drain and hand unfinished requests to survivors (zero
+    in-flight drops — the headline gate) while admission control bounds
+    the p99 inflation; stock drops whatever the wave catches in-flight."""
+    from repro.serving import (ServingDegradationPolicy, ServingScript,
+                               ServingWorkload)
+
+    return Scenario(
+        name="serve_wave",
+        description="AWS us-east-1 serving fleet: +60/h revocation hazard "
+                    "for 3 min through a 400-request stream at 2 req/s",
+        faults=(PreemptionWave(0.01, 0.05, 60.0),),
+        provider="aws", region="us-east-1",
+        serving=ServingScript(
+            replicas=4, batch_ceiling=8, token_time_s=0.05,
+            horizon_s=1800.0,
+            workload=ServingWorkload(
+                n_requests=400, arrival_rate_per_s=2.0, prompt_tokens=32,
+                min_tokens=8, max_tokens=32, high_priority_frac=0.25,
+                queue_capacity=64, queue_budget_s=15.0,
+                hedge_timeout_s=20.0),
+            policy=ServingDegradationPolicy(
+                reduce_tokens_below=1.0, shrink_batch_below=0.75,
+                shed_below=0.5)),
+        expect={"serving_zero_dropped_warned": True,
+                "serving_min_armed_drop_delta": 1.0,
+                "serving_max_p99_inflation": 20.0,
+                "serving_min_degraded_cycles": 1.0})
 
 
 @register_scenario

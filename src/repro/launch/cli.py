@@ -172,6 +172,27 @@ def add_serve_args(p: argparse.ArgumentParser) -> None:
     p.add_argument("--temperature", type=float, default=0.0)
 
 
+def add_serve_fleet_args(p: argparse.ArgumentParser) -> None:
+    """`serve --fleet` planning flags (docs/serving.md)."""
+    g = p.add_argument_group("fleet planning (--fleet)")
+    g.add_argument("--fleet", action="store_true",
+                   help="plan an SLO-aware serving fleet across transient "
+                        "markets instead of decoding locally")
+    g.add_argument("--gpu", default="v100", choices=("k80", "p100", "v100"))
+    g.add_argument("--providers", default="gcp,aws",
+                   help="comma-separated transient markets to score")
+    g.add_argument("--replica-counts", default="2,4,8",
+                   help="comma-separated fleet sizes to score")
+    g.add_argument("--requests", type=int, default=200,
+                   help="workload size (open-loop Poisson stream)")
+    g.add_argument("--rate", type=float, default=2.0,
+                   help="mean arrivals per second")
+    g.add_argument("--slo-p99", type=float, default=10.0,
+                   help="p99 end-to-end latency SLO, seconds")
+    g.add_argument("--plan-samples", type=int, default=8,
+                   help="simulation trajectories per fleet cell")
+
+
 def add_fleet_args(p: argparse.ArgumentParser,
                    workers_default: int = 4) -> None:
     from repro.providers import available_providers

@@ -135,7 +135,10 @@ def init_state(cfg: ModelConfig, batch: int, max_len: int,
 def decode_step(params, cfg: ModelConfig, state, tokens, index):
     B = tokens.shape[0]
     x = params["embed"].astype(cfg.dtype)[tokens][:, None]
-    pos = jnp.full((B, 1), index, jnp.int32)
+    if jnp.ndim(index) == 0:
+        pos = jnp.full((B, 1), index, jnp.int32)
+    else:
+        pos = index.astype(jnp.int32)[:, None]
     sp = params["shared_attn"]
 
     def group_body(x, xs):

@@ -190,6 +190,32 @@ def _attn_block(qg, k, v, causal, q_offset, block_start, scale):
     return out.astype(qg.dtype)
 
 
+def _cache_store(buf, val, index):
+    """Write a decode-step slice into ``buf`` at position ``index`` (axis 1).
+
+    ``index`` is either a scalar — lockstep decode, every row at the same
+    depth (the original `dynamic_update_slice` path, bit-identical) — or a
+    (B,) vector of per-row positions for continuous batching, where each
+    slot sits at its own depth. The vector path requires S == 1 steps.
+    """
+    val = val.astype(buf.dtype)
+    if jnp.ndim(index) == 0:
+        return lax.dynamic_update_slice(
+            buf, val, (0, index) + (0,) * (buf.ndim - 2))
+    return buf.at[jnp.arange(buf.shape[0]), index].set(val[:, 0])
+
+
+def _cache_valid(index, S, Sk, n_between):
+    """Mask of attendable key positions: kpos <= index + S - 1, shaped with
+    ``n_between`` singleton dims between the (optional) batch dim and Sk so
+    it broadcasts against the decode logits."""
+    kpos = jnp.arange(Sk).reshape((1,) * (n_between + 1) + (Sk,))
+    last = index + S - 1
+    if jnp.ndim(index) == 0:
+        return kpos <= last
+    return kpos <= last.reshape((-1,) + (1,) * (n_between + 1))
+
+
 def attention(params, cfg: ModelConfig, x, positions,
               cache: Optional[Dict[str, jnp.ndarray]] = None,
               cache_index=None):
@@ -216,28 +242,21 @@ def attention(params, cfg: ModelConfig, x, positions,
             # memory roofline (the dominant term for every decode cell)
             kq, ks_ = _quant_int8(k)
             vq, vs_ = _quant_int8(v)
-            ck = lax.dynamic_update_slice(cache["k"], kq, (0, cache_index, 0, 0))
-            cv = lax.dynamic_update_slice(cache["v"], vq, (0, cache_index, 0, 0))
-            cks = lax.dynamic_update_slice(cache["k_scale"], ks_,
-                                           (0, cache_index, 0))
-            cvs = lax.dynamic_update_slice(cache["v_scale"], vs_,
-                                           (0, cache_index, 0))
+            ck = _cache_store(cache["k"], kq, cache_index)
+            cv = _cache_store(cache["v"], vq, cache_index)
+            cks = _cache_store(cache["k_scale"], ks_, cache_index)
+            cvs = _cache_store(cache["v_scale"], vs_, cache_index)
             new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
             ck = ck.astype(jnp.bfloat16) * cks[..., None].astype(jnp.bfloat16)
             cv = cv.astype(jnp.bfloat16) * cvs[..., None].astype(jnp.bfloat16)
         else:
-            ck = lax.dynamic_update_slice(cache["k"],
-                                          k.astype(cache["k"].dtype),
-                                          (0, cache_index, 0, 0))
-            cv = lax.dynamic_update_slice(cache["v"],
-                                          v.astype(cache["v"].dtype),
-                                          (0, cache_index, 0, 0))
+            ck = _cache_store(cache["k"], k, cache_index)
+            cv = _cache_store(cache["v"], v, cache_index)
             new_cache = {"k": ck, "v": cv}
         ck = constrain(ck, "batch", "kv_seq", "kv_heads", None)
         cv = constrain(cv, "batch", "kv_seq", "kv_heads", None)
         Sk = ck.shape[1]
-        kpos = jnp.arange(Sk)
-        valid = kpos[None, None, None, None, :] <= (cache_index + S - 1)
+        valid = _cache_valid(cache_index, S, Sk, 3)
         KV = ck.shape[2]
         G = cfg.n_heads // KV
         qg = q.reshape(B, S, KV, G, cfg.head_dim)
@@ -302,10 +321,8 @@ def mla_attention(params, cfg: ModelConfig, x, positions,
 
     if cache is not None:
         # absorbed decode: q_lat = q_nope @ W_uk  -> score against c_kv cache
-        cc = lax.dynamic_update_slice(cache["c_kv"], c_kv.astype(
-            cache["c_kv"].dtype), (0, cache_index, 0))
-        cr = lax.dynamic_update_slice(cache["k_rope"], k_rope.astype(
-            cache["k_rope"].dtype), (0, cache_index, 0))
+        cc = _cache_store(cache["c_kv"], c_kv, cache_index)
+        cr = _cache_store(cache["k_rope"], k_rope, cache_index)
         cc = constrain(cc, "batch", "kv_seq", "qk_lora")
         cr = constrain(cr, "batch", "kv_seq", None)
         new_cache = {"c_kv": cc, "k_rope": cr}
@@ -315,7 +332,7 @@ def mla_attention(params, cfg: ModelConfig, x, positions,
                   + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
                                cr.astype(jnp.float32))) * scale
         Sk = cc.shape[1]
-        valid = jnp.arange(Sk)[None, None, None, :] <= (cache_index + S - 1)
+        valid = _cache_valid(cache_index, S, Sk, 2)
         logits = jnp.where(valid, logits, -1e30)
         w = jax.nn.softmax(logits, axis=-1)
         o_lat = jnp.einsum("bhst,btr->bshr", w, cc.astype(jnp.float32))

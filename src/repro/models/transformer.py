@@ -199,11 +199,15 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, index):
-    """One decode step. tokens: (B,) int32; index: scalar position.
-    Returns (logits (B,V), new_cache)."""
+    """One decode step. tokens: (B,) int32; index: scalar position, or a
+    (B,) vector of per-row positions (continuous batching — each slot at
+    its own depth). Returns (logits (B,V), new_cache)."""
     B = tokens.shape[0]
     x = params["embed"].astype(cfg.dtype)[tokens][:, None]  # (B,1,d)
-    pos = jnp.full((B, 1), index, jnp.int32)
+    if jnp.ndim(index) == 0:
+        pos = jnp.full((B, 1), index, jnp.int32)
+    else:
+        pos = index.astype(jnp.int32)[:, None]
     if cfg.mrope_sections:
         pos = jnp.broadcast_to(pos[None], (3, B, 1))
     x = constrain(x, "batch", None, "embed")

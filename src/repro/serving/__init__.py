@@ -1,0 +1,29 @@
+"""`repro.serving` — revocation-tolerant serving gateway (docs/serving.md).
+
+Three layers, mirroring the training stack's split:
+
+* **Gateway** (`GatewayEngine`): continuous batching over the real
+  model — per-slot decode positions in one shared KV/SSM state, in-trace
+  join resets and sampling, `jit_cache`-shared traced step.
+* **Admission & policy** (`AdmissionQueue`, `ServingDegradationPolicy`):
+  bounded queueing with deadline sheds, and quorum-style capacity tiers
+  stepped down before the latency SLO breaks.
+* **Fleet** (`ReplicaSet`, `ServingFleetSim`, `plan_serving`): replicas
+  on revocable instances under provider lifetime laws — warned-revocation
+  drain + handover, silent-revocation requeue-with-retry, hedged
+  re-dispatch — scored as event/batched parity ensembles and ranked
+  against an SLO.
+"""
+from repro.serving.degradation import (ServingDegradationPolicy,  # noqa: F401
+                                       TIERS)
+from repro.serving.engine import GatewayEngine  # noqa: F401
+from repro.serving.planner import (ServingPlan, ServingSLO,  # noqa: F401
+                                   plan_serving)
+from repro.serving.queue import AdmissionQueue  # noqa: F401
+from repro.serving.replica import (ACTIVE, DOWN, DRAINING,  # noqa: F401
+                                   Replica, ReplicaSet)
+from repro.serving.requests import (COMPLETED, DROPPED, SHED,  # noqa: F401
+                                    Request, RequestOutcome)
+from repro.serving.simulator import (ServingFleetSim,  # noqa: F401
+                                     ServingScript, ServingSimResult,
+                                     ServingWorkload, summarize_serving)
